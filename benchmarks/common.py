@@ -1,0 +1,58 @@
+"""Shared benchmark harness: datasets scaled to CPU, one trained NAI model
+per (dataset, base_model), reused across tables."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.gnn import (DistillConfig, GNNConfig, NAIConfig, accuracy,
+                       infer_all, load_dataset, train_nai)
+
+# CPU-budget scale factors per paper dataset (Table 2 shapes, scaled)
+SCALES = {
+    "pubmed-like": 0.15,
+    "flickr-like": 0.04,
+    "arxiv-like": 0.02,
+    "products-like": 0.002,
+}
+K_FOR = {"pubmed-like": 4, "flickr-like": 4, "arxiv-like": 5,
+         "products-like": 5}
+
+_DC = DistillConfig(epochs_base=150, epochs_offline=80, epochs_online=80)
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(name: str):
+    return load_dataset(name, scale=SCALES[name], seed=0)
+
+
+@functools.lru_cache(maxsize=None)
+def trained(name: str, base_model: str = "sgc") -> Tuple:
+    g = dataset(name)
+    k = K_FOR[name] if base_model == "sgc" else 4
+    cfg = GNNConfig(base_model, g.features.shape[1], g.num_classes, k=k,
+                    hidden=64, mlp_layers=2, dropout=0.1)
+    t0 = time.time()
+    params, info = train_nai(cfg, g, _DC)
+    return cfg, params, {"train_s": time.time() - t0, **info}
+
+
+def grid_search_ts(name: str, base_model: str = "sgc", t_max=None,
+                   quantiles=(0.05, 0.25, 0.5, 0.75, 0.95)):
+    """Paper §3.3: users search T_s on validation to match latency. We probe
+    distance quantiles of the first propagation step."""
+    g = dataset(name)
+    cfg, params, _ = trained(name, base_model)
+    from repro.gnn.graph import propagated_series, stationary_weights
+    series = propagated_series(g, g.features, 1, cfg.r)
+    a, b = stationary_weights(g, cfg.r)
+    x_inf = np.outer(a, b @ g.features)
+    d = np.linalg.norm(series[1] - x_inf, axis=1)
+    return [float(np.quantile(d, q)) for q in quantiles]
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,34 @@
+"""Figure 2: accuracy / inference-time trade-off — NAI_1..3 settings per
+dataset vs vanilla."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, dataset, grid_search_ts, trained
+from repro.gnn import NAIConfig, accuracy, infer_all
+from repro.gnn.baselines import run_vanilla
+
+DATASETS = ["pubmed-like", "flickr-like", "arxiv-like", "products-like"]
+
+
+def run(datasets=DATASETS) -> list:
+    rows = []
+    for name in datasets:
+        g = dataset(name)
+        cfg, params, _ = trained(name)
+        n = len(g.test_idx)
+        van = run_vanilla(cfg, g, params)
+        rows.append(csv_row(f"fig2/{name}/SGC", 1e6 * van.time_s / n,
+                            f"acc={van.acc:.4f}"))
+        qs = grid_search_ts(name)
+        settings = {
+            "NAI1": NAIConfig(t_s=qs[4], t_min=1, t_max=2, batch_size=500),
+            "NAI2": NAIConfig(t_s=qs[2], t_min=1, t_max=max(cfg.k - 1, 2),
+                              batch_size=500),
+            "NAI3": NAIConfig(t_s=qs[0], t_min=1, t_max=cfg.k,
+                              batch_size=500),
+        }
+        for tag, nc in settings.items():
+            res = infer_all(cfg, nc, params, g)
+            rows.append(csv_row(
+                f"fig2/{name}/{tag}", 1e6 * res.wall_time_s / n,
+                f"acc={accuracy(res, g):.4f};fp_macs={res.fp_macs:.0f}"))
+    return rows

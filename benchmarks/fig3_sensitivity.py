@@ -1,0 +1,35 @@
+"""Figure 3: sensitivity of Inception Distillation to T, lambda, r
+(f^(1) accuracy on flickr-like)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALES, csv_row
+from repro.gnn import DistillConfig, GNNConfig, evaluate_classifier, train_nai
+from repro.gnn.graph import propagated_series
+
+
+def run(name: str = "flickr-like") -> list:
+    from repro.gnn import load_dataset
+    g = load_dataset(name, scale=SCALES[name], seed=0, hard=True)
+    cfg = GNNConfig("sgc", g.features.shape[1], g.num_classes, k=3,
+                    hidden=64, mlp_layers=2, dropout=0.0)
+    series = np.stack(propagated_series(g, g.features, cfg.k))
+    rows = []
+
+    def acc_with(dc: DistillConfig) -> float:
+        params, _ = train_nai(cfg, g, dc)
+        return evaluate_classifier(cfg, params["cls"][1], series, g.labels,
+                                   g.test_idx, 1)
+
+    base = dict(epochs_base=120, epochs_offline=60, epochs_online=60)
+    for T in (1.0, 1.2, 1.5, 2.0):
+        a = acc_with(DistillConfig(temperature=T, **base))
+        rows.append(csv_row(f"fig3/{name}/T={T}", 0.0, f"f1_acc={a:.4f}"))
+    for lam in (0.1, 0.5, 0.8, 1.0):
+        a = acc_with(DistillConfig(lam=lam, **base))
+        rows.append(csv_row(f"fig3/{name}/lam={lam}", 0.0, f"f1_acc={a:.4f}"))
+    for r in (1, 2, 3):
+        a = acc_with(DistillConfig(ensemble_r=r, **base))
+        rows.append(csv_row(f"fig3/{name}/r={r}", 0.0, f"f1_acc={a:.4f}"))
+    return rows

@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks: interpret-mode timings are NOT TPU performance
+(CPU emulation); the derived columns report the structural quantities that
+matter on TPU — tiles touched vs skipped (NAP predication saving), VMEM
+working set per BlockSpec, and arithmetic intensity."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.kernels.spmm import (CB, FB, RB, active_blocks_from_nodes,
+                                build_block_ell, pad_features, spmm)
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    n, deg, f = 1024, 8, 256
+    E = n * deg
+    src = rng.integers(0, n, E).astype(np.int32)
+    dst = rng.integers(0, n, E).astype(np.int32)
+    src = np.concatenate([src, np.arange(n, dtype=np.int32)])
+    dst = np.concatenate([dst, np.arange(n, dtype=np.int32)])
+    coef = rng.random(len(src)).astype(np.float32)
+    ell = build_block_ell(src, dst, coef, n)
+    x = jnp.asarray(pad_features(rng.standard_normal((n, f)), ell.n_pad))
+    n_rb = ell.tile_col.shape[0]
+
+    for frac in (1.0, 0.5, 0.1):
+        active = jnp.asarray((rng.random(n_rb) < frac).astype(np.int32))
+        t0 = time.perf_counter()
+        out = spmm(ell, x, active, interpret=True)
+        out.block_until_ready()
+        dt = time.perf_counter() - t0
+        tiles_total = int(ell.valid.sum())
+        tiles_live = int(ell.valid[np.asarray(active) != 0].sum())
+        vmem_kb = (RB * CB + CB * FB + RB * FB) * 4 / 1024
+        ai = (2 * RB * CB * FB) / ((RB * CB + CB * FB + RB * FB) * 4)
+        rows.append(csv_row(
+            f"kernels/spmm/active={frac}", 1e6 * dt,
+            f"tiles_live={tiles_live}/{tiles_total};"
+            f"predicated_saving={1 - tiles_live / tiles_total:.2f};"
+            f"vmem_per_step_kb={vmem_kb:.0f};arith_intensity={ai:.1f}"))
+    return rows

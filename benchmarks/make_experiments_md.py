@@ -1,0 +1,136 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+experiments/dryrun/*.json. Manual sections (§Perf narrative, §Paper-repro)
+live in EXPERIMENTS.md outside the AUTOGEN markers and are preserved."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+DIR = "experiments/dryrun"
+MD = "EXPERIMENTS.md"
+BEGIN = "<!-- AUTOGEN:DRYRUN BEGIN -->"
+END = "<!-- AUTOGEN:DRYRUN END -->"
+
+ARCH_ORDER = ["granite-34b", "deepseek-coder-33b", "whisper-small",
+              "gemma-7b", "recurrentgemma-9b", "mistral-large-123b",
+              "grok-1-314b", "rwkv6-3b", "dbrx-132b", "llama-3.2-vision-11b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if abs(b) >= div:
+            return f"{b / div:.2f}{unit}"
+    return f"{b:.0f}B"
+
+
+def fmt_ms(s):
+    return f"{1e3 * s:.2f}"
+
+
+def load():
+    recs = {}
+    for p in glob.glob(os.path.join(DIR, "*.json")):
+        r = json.load(open(p))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def dryrun_table(recs, mesh):
+    lines = [
+        f"### Mesh {mesh} ({'512' if mesh == '2x16x16' else '256'} chips)",
+        "",
+        "| arch | shape | mode | lower s | compile s | params | arg bytes | temp bytes | HLO FLOPs (global) | collectives/chip |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if not r:
+                continue
+            t = r["roofline"]
+            coll = {k.split("-")[1] if "-" in k else k: fmt_bytes(v)
+                    for k, v in t["collectives"].items() if v}
+            coll_s = ", ".join(f"{k}={v}" for k, v in sorted(coll.items())) or "-"
+            lines.append(
+                f"| {a} | {s} | {r['mode']} | {r['lower_s']} | "
+                f"{r.get('compile_s', '-')} | {r['params'] / 1e9:.1f}B | "
+                f"{fmt_bytes(r['memory']['argument_bytes'])} | "
+                f"{fmt_bytes(r['memory']['temp_bytes'])} | "
+                f"{t['hlo_flops']:.3e} | {coll_s} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    lines = [
+        "Single-pod (16x16 = 256 chips) roofline terms per step, TPU v5e "
+        "constants (197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI/link). "
+        "t_* in ms; dominant term bold; `useful` = MODEL_FLOPS / HLO_FLOPs.",
+        "",
+        "| arch | shape | t_compute | t_memory | t_collective | dominant | useful | bottleneck note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    notes = {
+        "compute": "MXU-bound; increase arithmetic intensity only",
+        "memory": "HBM traffic bound: fuse/remat-tune, cut activation round-trips, bf16 stats",
+        "collective": "ICI bound: resharding or gradient all-reduce dominates; change layout/overlap",
+    }
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, "16x16"))
+            if not r:
+                continue
+            t = r["roofline"]
+            vals = {"compute": t["t_compute_s"], "memory": t["t_memory_s"],
+                    "collective": t["t_collective_s"]}
+            cells = {k: fmt_ms(v) for k, v in vals.items()}
+            cells[t["dominant"]] = f"**{cells[t['dominant']]}**"
+            lines.append(
+                f"| {a} | {s} | {cells['compute']} | {cells['memory']} | "
+                f"{cells['collective']} | {t['dominant']} | "
+                f"{t['useful_ratio']:.2f} | {notes[t['dominant']]} |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    n1 = sum(1 for k in recs if k[2] == "16x16")
+    n2 = sum(1 for k in recs if k[2] == "2x16x16")
+    body = [
+        BEGIN,
+        "",
+        f"## §Dry-run ({n1} single-pod + {n2} multi-pod combos, all compiled OK)",
+        "",
+        "Every (architecture x input shape) lowers AND compiles for both "
+        "production meshes. `train_4k` lowers the full train step (fwd + bwd "
+        "+ AdamW); `prefill_32k` the prefill (last logits + KV caches); "
+        "decode shapes the single-token `serve_step` with materialized KV "
+        "cache (full-attention archs serve `long_500k` through the "
+        "sliding-window variant, window 4096 — DESIGN.md §4).",
+        "",
+        dryrun_table(recs, "16x16"),
+        "",
+        dryrun_table(recs, "2x16x16"),
+        "",
+        "## §Roofline",
+        "",
+        roofline_table(recs),
+        "",
+        END,
+    ]
+    text = open(MD).read() if os.path.exists(MD) else "# EXPERIMENTS\n\n" + BEGIN + "\n" + END + "\n"
+    pattern = re.compile(re.escape(BEGIN) + ".*?" + re.escape(END), re.S)
+    if pattern.search(text):
+        text = pattern.sub("\n".join(body), text)
+    else:
+        text += "\n" + "\n".join(body) + "\n"
+    open(MD, "w").write(text)
+    print(f"wrote {MD}: {n1}+{n2} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""§Roofline report: reads the dry-run records (experiments/dryrun/*.json)
+and emits the per-(arch x shape x mesh) roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+
+def run(dryrun_dir: str = "experiments/dryrun") -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(path))
+        t = r.get("roofline")
+        if not t:
+            continue
+        bound = max(t["t_compute_s"], t["t_memory_s"], t["t_collective_s"])
+        frac = t["t_compute_s"] / bound if bound else 0.0
+        rows.append(csv_row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            1e6 * bound,
+            f"dominant={t['dominant']};"
+            f"t_compute_ms={1e3 * t['t_compute_s']:.2f};"
+            f"t_memory_ms={1e3 * t['t_memory_s']:.2f};"
+            f"t_collective_ms={1e3 * t['t_collective_s']:.2f};"
+            f"roofline_frac={frac:.3f};"
+            f"useful_ratio={t['useful_ratio']:.2f};"
+            f"per_chip_gb={r['memory']['per_chip_gb']}"))
+    if not rows:
+        rows.append(csv_row("roofline/missing", 0.0,
+                            "run repro.launch.dryrun first"))
+    return rows

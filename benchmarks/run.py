@@ -1,0 +1,77 @@
+"""Benchmark entry point — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only table3,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller datasets, fewer epochs")
+    ap.add_argument("--only", default="",
+                    help="comma list: table3,table5,table6,table7,fig2,fig3,"
+                         "roofline,kernels,ablation")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    if args.quick:
+        import dataclasses
+        import benchmarks.common as C
+        C.SCALES = {k: min(v, 0.05) for k, v in C.SCALES.items()}
+        C.SCALES["products-like"] = 0.001
+        C._DC = dataclasses.replace(C._DC, epochs_base=60, epochs_offline=30,
+                                    epochs_online=30)
+
+    suites = []
+    if only is None or "table3" in only:
+        from benchmarks.table3_inference import run as t3
+        suites.append(("table3", t3))
+    if only is None or "table5" in only:
+        from benchmarks.table5_nap import run as t5
+        suites.append(("table5", t5))
+    if only is None or "table6" in only:
+        from benchmarks.table6_distill import run as t6
+        suites.append(("table6", t6))
+    if only is None or "table7" in only:
+        from benchmarks.table7_generalization import run as t7
+        suites.append(("table7", t7))
+    if only is None or "fig2" in only:
+        from benchmarks.fig2_tradeoff import run as f2
+        suites.append(("fig2", f2))
+    if only is None or "fig3" in only:
+        from benchmarks.fig3_sensitivity import run as f3
+        suites.append(("fig3", f3))
+    if only is None or "roofline" in only:
+        from benchmarks.roofline_report import run as rl
+        suites.append(("roofline", rl))
+    if only is None or "kernels" in only:
+        from benchmarks.kernel_bench import run as kb
+        suites.append(("kernels", kb))
+    if only is None or "ablation" in only:
+        from benchmarks.ablation_batch import run as ab
+        suites.append(("ablation", ab))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, fn in suites:
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+        print(f"# {tag} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Table 3: inference comparison — NAI vs vanilla SGC / GLNN / TinyGNN /
+Quantization on four datasets. Metrics: ACC, total MACs/node, FP MACs/node,
+time/node, FP time/node, plus acceleration ratios vs vanilla."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import K_FOR, csv_row, dataset, grid_search_ts, trained
+from repro.gnn import NAIConfig, accuracy, infer_all
+from repro.gnn.baselines import (run_glnn, run_quantized, run_tinygnn,
+                                 run_vanilla)
+
+DATASETS = ["pubmed-like", "flickr-like", "arxiv-like", "products-like"]
+
+
+def run(datasets=DATASETS) -> list:
+    rows = []
+    for name in datasets:
+        g = dataset(name)
+        cfg, params, _ = trained(name)
+        n_test = len(g.test_idx)
+
+        van = run_vanilla(cfg, g, params)
+        glnn = run_glnn(cfg, g, params["cls"][cfg.k], epochs=150)
+        tiny = run_tinygnn(cfg, g, params["cls"][cfg.k], epochs=150)
+        quant = run_quantized(cfg, g, params)
+
+        # speed-first NAI (the paper's NAI_1): aggressive threshold
+        ts = grid_search_ts(name)[3]
+        nai = infer_all(cfg, NAIConfig(t_s=ts, t_min=1, t_max=2,
+                                       batch_size=500), params, g)
+        nai_acc = accuracy(nai, g)
+
+        def us(t):
+            return 1e6 * t / n_test
+
+        rows += [
+            csv_row(f"table3/{name}/SGC", us(van.time_s),
+                    f"acc={van.acc:.4f};macs={van.macs:.0f};fp_macs={van.fp_macs:.0f}"),
+            csv_row(f"table3/{name}/GLNN", us(glnn.time_s),
+                    f"acc={glnn.acc:.4f};macs={glnn.macs:.0f};fp_macs=0"),
+            csv_row(f"table3/{name}/TinyGNN", us(tiny.time_s),
+                    f"acc={tiny.acc:.4f};macs={tiny.macs:.0f};fp_macs={tiny.fp_macs:.0f}"),
+            csv_row(f"table3/{name}/Quantization", us(quant.time_s),
+                    f"acc={quant.acc:.4f};macs={quant.macs:.0f};fp_macs={quant.fp_macs:.0f}"),
+            csv_row(f"table3/{name}/NAI", us(nai.wall_time_s),
+                    f"acc={nai_acc:.4f};macs={nai.total_macs:.0f};"
+                    f"fp_macs={nai.fp_macs:.0f};"
+                    f"macs_speedup={van.macs / max(nai.total_macs, 1):.1f}x;"
+                    f"fp_speedup={van.fp_macs / max(nai.fp_macs, 1):.1f}x;"
+                    f"time_speedup={van.time_s / max(nai.wall_time_s, 1e-9):.1f}x"),
+        ]
+    return rows

@@ -1,0 +1,34 @@
+"""Table 7: generalization — NAI deployed on S2GC / SIGN / GAMLP (Flickr)."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, dataset, grid_search_ts, trained
+from repro.gnn import NAIConfig, accuracy, infer_all
+from repro.gnn.baselines import run_glnn, run_quantized, run_vanilla
+
+BASE_MODELS = ["s2gc", "sign", "gamlp"]
+
+
+def run(name: str = "flickr-like") -> list:
+    rows = []
+    g = dataset(name)
+    for bm in BASE_MODELS:
+        cfg, params, _ = trained(name, bm)
+        n = len(g.test_idx)
+        van = run_vanilla(cfg, g, params)
+        glnn = run_glnn(cfg, g, params["cls"][cfg.k], epochs=150)
+        quant = run_quantized(cfg, g, params)
+        ts = grid_search_ts(name, bm)[3]
+        nai = infer_all(cfg, NAIConfig(t_s=ts, t_min=1, t_max=2,
+                                       batch_size=500), params, g)
+        rows += [
+            csv_row(f"table7/{bm}/vanilla", 1e6 * van.time_s / n,
+                    f"acc={van.acc:.4f};macs={van.macs:.0f}"),
+            csv_row(f"table7/{bm}/GLNN", 1e6 * glnn.time_s / n,
+                    f"acc={glnn.acc:.4f};macs={glnn.macs:.0f}"),
+            csv_row(f"table7/{bm}/Quantization", 1e6 * quant.time_s / n,
+                    f"acc={quant.acc:.4f};macs={quant.macs:.0f}"),
+            csv_row(f"table7/{bm}/NAI", 1e6 * nai.wall_time_s / n,
+                    f"acc={accuracy(nai, g):.4f};macs={nai.total_macs:.0f};"
+                    f"time_speedup={van.time_s / max(nai.wall_time_s, 1e-9):.1f}x"),
+        ]
+    return rows

@@ -1,0 +1,38 @@
+"""Quickstart: the paper's pipeline in ~40 lines.
+
+Train NAI (base SGC + Inception Distillation) on a synthetic pubmed-scale
+graph, then run Node-Adaptive Inference at three latency settings.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.gnn import (DistillConfig, GNNConfig, NAIConfig, accuracy,
+                       infer_all, load_dataset, order_distribution, train_nai)
+from repro.gnn.baselines import run_vanilla
+
+# 1. data: inductive split — test nodes are unseen during training
+g = load_dataset("pubmed-like", scale=0.1, seed=0)
+print(f"graph: {g.n} nodes, {g.num_edges} edges, {g.num_classes} classes")
+
+# 2. train the base model f^(k) and distill into per-order classifiers
+cfg = GNNConfig(base_model="sgc", feat_dim=g.features.shape[1],
+                num_classes=g.num_classes, k=4, hidden=64, mlp_layers=2)
+params, info = train_nai(cfg, g, DistillConfig(
+    epochs_base=150, epochs_offline=80, epochs_online=80))
+print(f"trained: base_loss={info['base_loss']:.4f}")
+
+# 3. vanilla inference = every node propagates k times
+van = run_vanilla(cfg, g, params)
+print(f"vanilla SGC: acc={van.acc:.4f} fp_macs/node={van.fp_macs:.0f}")
+
+# 4. NAI: per-node adaptive propagation order (Algorithm 1)
+for tag, t_s, t_max in [("speed-first", 25.0, 2),
+                        ("balanced", 16.0, 3),
+                        ("accuracy-first", 8.0, 4)]:
+    res = infer_all(cfg, NAIConfig(t_s=t_s, t_min=1, t_max=t_max,
+                                   batch_size=500), params, g)
+    print(f"NAI[{tag:15s}] acc={accuracy(res, g):.4f} "
+          f"fp_macs/node={res.fp_macs:.0f} "
+          f"({van.fp_macs / max(res.fp_macs, 1):.1f}x fewer) "
+          f"exit orders={list(order_distribution(res, cfg.k))}")

@@ -1,0 +1,64 @@
+"""msgpack-based checkpointing (orbax is not available offline).
+
+Pytrees of jax/numpy arrays are flattened to path-keyed buffers; dtypes and
+shapes round-trip exactly. Sharded arrays are gathered to host before save
+(adequate at the scales this container runs; a per-shard layout is a noted
+production follow-up in DESIGN.md).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(jax.device_get(leaf))
+        flat[_key_str(kp)] = {
+            "dtype": arr.dtype.name,   # name survives ml_dtypes (bfloat16)
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    payload = {"step": step, "arrays": flat}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like: Any):
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). Returns (tree, step)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    arrays = payload["arrays"]
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for kp, leaf in leaves_with_path:
+        k = _key_str(kp)
+        if k not in arrays:
+            raise KeyError(f"checkpoint missing {k}")
+        rec = arrays[k]
+        arr = np.frombuffer(rec["data"], dtype=jnp.dtype(rec["dtype"]))
+        arr = arr.reshape(rec["shape"])
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), payload["step"]

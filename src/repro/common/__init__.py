@@ -1,0 +1,16 @@
+from repro.common.types import (
+    AdaptiveDepthConfig,
+    HardwareConfig,
+    INPUT_SHAPES,
+    LAYER_KINDS,
+    MeshConfig,
+    ModelConfig,
+    ShapeConfig,
+    TPU_V5E,
+    TrainConfig,
+)
+
+__all__ = [
+    "AdaptiveDepthConfig", "HardwareConfig", "INPUT_SHAPES", "LAYER_KINDS",
+    "MeshConfig", "ModelConfig", "ShapeConfig", "TPU_V5E", "TrainConfig",
+]

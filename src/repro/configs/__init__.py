@@ -1,0 +1,94 @@
+"""Architecture registry + reduced smoke variants + input_specs.
+
+`get_config(arch_id)` resolves the exact assigned config; `smoke(cfg)`
+returns the reduced same-family variant used by CPU smoke tests (2-ish
+layers, d_model <= 512, <= 4 experts)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.sharding import spec as logical_spec
+
+from repro.configs.granite_34b import CONFIG as GRANITE_34B
+from repro.configs.deepseek_coder_33b import CONFIG as DEEPSEEK_CODER_33B
+from repro.configs.whisper_small import CONFIG as WHISPER_SMALL
+from repro.configs.gemma_7b import CONFIG as GEMMA_7B
+from repro.configs.recurrentgemma_9b import CONFIG as RECURRENTGEMMA_9B
+from repro.configs.mistral_large_123b import CONFIG as MISTRAL_LARGE_123B
+from repro.configs.grok_1_314b import CONFIG as GROK_1_314B
+from repro.configs.rwkv6_3b import CONFIG as RWKV6_3B
+from repro.configs.dbrx_132b import CONFIG as DBRX_132B
+from repro.configs.llama32_vision_11b import CONFIG as LLAMA32_VISION_11B
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c for c in [
+        GRANITE_34B, DEEPSEEK_CODER_33B, WHISPER_SMALL, GEMMA_7B,
+        RECURRENTGEMMA_9B, MISTRAL_LARGE_123B, GROK_1_314B, RWKV6_3B,
+        DBRX_132B, LLAMA32_VISION_11B,
+    ]
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def smoke(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant: identical pattern/kinds, tiny dims."""
+    n_body = len(cfg.pattern)            # one pattern repeat
+    kw = dict(
+        num_layers=n_body + len(cfg.remainder),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 4) if cfg.num_kv_heads > 1 else 1,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        rnn_width=128 if cfg.rnn_width else 0,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        encoder_seq=16,
+        num_image_tokens=8 if cfg.num_image_tokens else 0,
+        sliding_window=min(cfg.sliding_window, 16) if cfg.sliding_window else 0,
+        num_experts=min(cfg.num_experts, 4) if cfg.num_experts else 0,
+        experts_per_token=min(cfg.experts_per_token, 2) if cfg.experts_per_token else 0,
+        dtype="float32",
+        param_dtype="float32",
+        long_context_window=64,
+    )
+    if cfg.pattern == ("rwkv",):
+        kw.update(num_heads=2, num_kv_heads=2, rwkv_head_dim=64)
+    return dataclasses.replace(cfg, **kw)
+
+
+# --------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of (arch, shape).
+    No device allocation; shardable by the dry-run."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    specs: dict = {}
+    if shape.mode in ("train", "prefill"):
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), tok)
+    else:  # decode: one new token
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), tok)
+    if cfg.is_encdec:
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    elif cfg.num_image_tokens:
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    out = {"tokens": logical_spec("batch", None)}
+    if cfg.is_encdec or cfg.num_image_tokens:
+        out["frontend"] = logical_spec("batch", None, "embed")
+    return out

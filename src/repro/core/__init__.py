@@ -1,0 +1,12 @@
+"""The paper's contribution, as composable modules:
+
+* `repro.gnn.nai`            — Node-Adaptive Inference (Algorithm 1), faithful
+* `repro.gnn.distill`        — Inception Distillation for propagation-order
+                               classifiers (Eqs. 2-6), faithful
+* `repro.core.inception_distill` — the distillation primitives, shared
+* `repro.core.adaptive_depth`    — the technique generalized to early-exit
+                               transformer inference (beyond-paper)
+"""
+from repro.core import inception_distill
+
+__all__ = ["inception_distill"]

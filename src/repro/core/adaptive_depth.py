@@ -1,0 +1,114 @@
+"""Adaptive-Depth Inference (ADI) — the paper's NAP generalized to
+transformer decoding (beyond-paper; DESIGN.md §3).
+
+NAP's exit criterion is distance to a closed-form stationary state (Eq. 7).
+Pre-norm residual transformers have no closed form, but hidden states
+*saturate* with depth; the analogous criterion is the per-token relative
+saturation distance
+
+    d_t^(l) = ||h_t^(l) - h_t^(l-1)|| / ||h_t^(l)||      (cf. Eq. 8)
+
+A token exits at the first block l in [t_min, t_max] with d < t_s and is
+classified by its exit head (inception-distilled, repro.core.
+inception_distill). Exited tokens keep a frozen hidden state that still
+flows through later layers' KV projections (so subsequent tokens can attend)
+while their FFN/attention-query compute is masked — on TPU the masking is
+realized as block predication, exactly like the SpMM kernel's NAP rows.
+
+This module is the compiled masked path; the compute saving shows up at
+tile granularity (documented), numerics are exact w.r.t. the host
+early-exit semantics.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import blocks as B
+from repro.nn.basic import apply_norm
+from repro.sharding import constrain
+
+
+def saturation_distance(x_new: jax.Array, x_old: jax.Array) -> jax.Array:
+    """(B, 1, d) -> (B,) relative saturation distance."""
+    num = jnp.linalg.norm((x_new - x_old).astype(jnp.float32), axis=-1)
+    den = jnp.linalg.norm(x_new.astype(jnp.float32), axis=-1) + 1e-9
+    return (num / den)[:, 0]
+
+
+def adaptive_decode_step(cfg, params, cache, tokens, pos,
+                         frontend=None) -> Tuple[jax.Array, dict, dict]:
+    """Early-exit decode step. Returns (logits, new_cache, info) where
+    info = {exit_block (B,), saturation (B,), flops_saved_frac ()}.
+
+    Requires cfg.adaptive.enabled. Exit heads are those trained by
+    Inception Distillation; tokens that never cross the threshold use the
+    full trunk + final head (Algorithm 1 line 17)."""
+    from repro.models.decoder_lm import (_embed_tokens, _project_logits,
+                                         exit_logits)
+    ad = cfg.adaptive
+    assert ad.enabled, "cfg.adaptive.enabled must be set"
+    R = cfg.pattern_repeats
+    t_max = ad.t_max if ad.t_max >= 0 else R - 1
+
+    positions = jnp.broadcast_to(pos[None, None] if hasattr(pos, "shape")
+                                 else jnp.full((1, 1), pos), tokens.shape)
+    x = _embed_tokens(cfg, params, tokens, positions)
+    Bsz = tokens.shape[0]
+
+    exit_block = jnp.full((Bsz,), -1, jnp.int32)
+    exit_state = jnp.zeros_like(x)
+    sat = jnp.ones((Bsz,), jnp.float32)
+
+    def block_body(carry, xs):
+        x, exit_block, exit_state, sat, idx = xs[0] if False else carry
+        pblock, cblock = xs
+        active = exit_block < 0                       # (B,)
+        x_old = x
+        x_new = x
+        new_cblock = []
+        for j, kind in enumerate(cfg.pattern):
+            x_new, c, _ = B.apply_layer(cfg, kind, pblock[j], x_new,
+                                        mode="decode", cache=cblock[j],
+                                        pos=pos, frontend=frontend)
+            new_cblock.append(c)
+        # freeze exited tokens (their KV was still written above — later
+        # tokens can attend; the FFN result is discarded = predicated away)
+        am = active[:, None, None]
+        x = jnp.where(am, x_new, x_old)
+        d = saturation_distance(x_new, x_old)
+        sat = jnp.where(active, d, sat)
+        crosses = active & (idx >= ad.t_min) & (idx <= t_max) & (d < ad.t_s)
+        exit_block = jnp.where(crosses, idx, exit_block)
+        exit_state = jnp.where(crosses[:, None, None], x_new, exit_state)
+        return (x, exit_block, exit_state, sat, idx + 1), tuple(new_cblock)
+
+    (x, exit_block, exit_state, sat, _), new_blocks = jax.lax.scan(
+        block_body, (x, exit_block, exit_state, sat, jnp.int32(0)),
+        (params["blocks"], cache["blocks"]))
+
+    new_rem = []
+    for p, c, kind in zip(params["rem"], cache["rem"], cfg.remainder):
+        x, c2, _ = B.apply_layer(cfg, kind, p, x, mode="decode", cache=c,
+                                 pos=pos, frontend=frontend)
+        new_rem.append(c2)
+
+    # classify: exited tokens via their exit head, others via the trunk head
+    x_final = apply_norm(cfg, params["final_norm"], x)
+    trunk_logits = _project_logits(cfg, params, x_final)
+
+    logits = trunk_logits
+    if "exits" in params and ad.exit_layers:
+        for i, blk in enumerate(ad.exit_layers):
+            zi = exit_logits(cfg, params, exit_state, i)
+            m = (exit_block == blk)[:, None, None]
+            logits = jnp.where(m, zi, logits)
+
+    # fraction of block-compute predicated away this step
+    depth_used = jnp.where(exit_block < 0, R, exit_block + 1)
+    flops_saved = 1.0 - jnp.mean(depth_used.astype(jnp.float32)) / R
+    info = {"exit_block": exit_block, "saturation": sat,
+            "flops_saved_frac": flops_saved}
+    return logits, {"blocks": new_blocks, "rem": tuple(new_rem)}, info

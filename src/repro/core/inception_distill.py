@@ -1,0 +1,100 @@
+"""Inception Distillation (paper §3.2), generic over 'multi-exit' models.
+
+Primitives implement Eqs. (2)-(6) of the paper:
+  * soft-CE knowledge distillation at temperature T        (Eq. 3)
+  * offline loss  (1-λ)·CE + λ·T²·KD(student, teacher)     (Eq. 4)
+  * self-attention ensemble teacher over the top-r exits   (Eq. 5)
+  * online loss   (1-λ)·CE + λ·T²·KD(student, ensemble)    (Eq. 6)
+
+Used by `repro.gnn.distill` (the faithful GNN reproduction: one classifier
+per propagation order) and by `repro.models.decoder_lm` (the generalized
+transformer early-exit heads).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def soft_ce(student_logits, teacher_logits, temperature: float):
+    """KD loss: CE(softmax(t/T), log softmax(s/T)); mean over rows. (Eq. 3)"""
+    t = jax.nn.softmax(teacher_logits.astype(jnp.float32) / temperature, -1)
+    ls = jax.nn.log_softmax(student_logits.astype(jnp.float32) / temperature, -1)
+    return -jnp.mean(jnp.sum(t * ls, axis=-1))
+
+
+def hard_ce(logits, labels, mask=None):
+    lf = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    m = mask.astype(jnp.float32)
+    return -jnp.sum(ll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def offline_loss(student_logits, teacher_logits, labels, *, temperature, lam,
+                 label_mask=None):
+    """(Eq. 4). Teacher is stop-gradiented (pure offline distillation)."""
+    kd = soft_ce(student_logits, jax.lax.stop_gradient(teacher_logits),
+                 temperature)
+    ce = hard_ce(student_logits, labels, label_mask)
+    return (1.0 - lam) * ce + lam * temperature**2 * kd
+
+
+def ensemble_teacher(exit_logits: Sequence[jax.Array], s: jax.Array):
+    """Self-attention ensemble over exit predictions (Eq. 5).
+
+    exit_logits: list of (N, C) logits (the top-r classifiers).
+    s: (C, 1) learned projection.
+    Returns ensemble logits z̄ (N, C) — to be temperature-softmaxed by Eq. 6.
+    """
+    probs = [jax.nn.softmax(z.astype(jnp.float32), -1) for z in exit_logits]
+    scores = [jax.nn.relu(p @ s.astype(jnp.float32))[..., 0] for p in probs]
+    m = jnp.stack(scores, axis=-1)                       # (N, r)
+    w = jax.nn.softmax(m, axis=-1)                       # (N, r)
+    stacked = jnp.stack(probs, axis=-1)                  # (N, C, r)
+    mix = jnp.einsum("ncr,nr->nc", stacked, w)
+    return jnp.log(mix + 1e-9)                           # back to logit space
+
+
+def online_loss(student_logits, ens_logits, labels, *, temperature, lam,
+                label_mask=None):
+    """(Eq. 6). Ensemble teacher is NOT stop-gradiented — teacher and
+    students update simultaneously, per the paper."""
+    kd = soft_ce(student_logits, ens_logits, temperature)
+    ce = hard_ce(student_logits, labels, label_mask)
+    return (1.0 - lam) * ce + lam * temperature**2 * kd
+
+
+# ------------------------------------------------------- transformer flavor
+def transformer_inception_loss(cfg, params, states, final_logits, labels):
+    """Generalized ID for early-exit LM heads.
+
+    states: (R, B, S, d) per-block hidden states from the trunk scan.
+    final_logits: (B, S, V) trunk output.  labels: (B, S-1)."""
+    from repro.models.decoder_lm import exit_logits as head
+
+    ad = cfg.adaptive
+    exits = []
+    for i, blk in enumerate(ad.exit_layers):
+        z = head(cfg, params, states[blk][:, :-1], i)
+        exits.append(z.reshape(-1, z.shape[-1]))
+    teacher = final_logits[:, :-1].reshape(-1, final_logits.shape[-1])
+    flat_labels = labels.reshape(-1)
+
+    total = jnp.zeros((), jnp.float32)
+    metrics = {}
+    for i, z in enumerate(exits):
+        total += offline_loss(z, teacher, flat_labels,
+                              temperature=ad.temperature, lam=ad.lam)
+    # online: ensemble over top-r heads (final + deepest exits)
+    pool = (exits + [teacher])[-max(ad.ensemble_r, 1):]
+    ens = ensemble_teacher(pool, params["exits"]["ens_s"])
+    for i, z in enumerate(exits):
+        total += online_loss(z, ens, flat_labels,
+                             temperature=ad.temperature, lam=ad.lam)
+    total = total / max(len(exits), 1)
+    metrics["inception_loss"] = total
+    return total, metrics

@@ -1,0 +1,3 @@
+from repro.data.tokens import synthetic_lm_batch, synthetic_stream
+
+__all__ = ["synthetic_lm_batch", "synthetic_stream"]

@@ -1,0 +1,13 @@
+from repro.gnn.graph import Graph, propagated_series, stationary_weights
+from repro.gnn.datasets import load_dataset, PRESETS
+from repro.gnn.models import GNNConfig, apply_classifier, init_classifiers
+from repro.gnn.distill import DistillConfig, train_nai, evaluate_classifier
+from repro.gnn.nai import (NAIConfig, NAIResult, accuracy, infer_all,
+                           order_distribution)
+
+__all__ = [
+    "Graph", "propagated_series", "stationary_weights", "load_dataset",
+    "PRESETS", "GNNConfig", "apply_classifier", "init_classifiers",
+    "DistillConfig", "train_nai", "evaluate_classifier", "NAIConfig",
+    "NAIResult", "accuracy", "infer_all", "order_distribution",
+]

@@ -1,0 +1,198 @@
+"""Paper baselines (§4.1): GLNN, TinyGNN (lite), and INT8 quantization.
+
+All baselines share the NAI evaluation harness: ACC + per-node MACs split
+into feature processing and classification + wall time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import TrainConfig
+from repro.core.inception_distill import hard_ce, offline_loss
+from repro.gnn.graph import Graph, propagated_series
+from repro.gnn.models import GNNConfig, apply_classifier, classification_macs
+from repro.gnn.sampler import sample_support
+from repro.nn.params import ParamDef, init_tree
+from repro.optim import adamw_init, adamw_update
+
+
+def _mlp_defs(dims):
+    out = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        out[f"w{i}"] = ParamDef((a, b), (None, None))
+        out[f"b{i}"] = ParamDef((b,), (None,), "zeros")
+    return out
+
+
+def _mlp_apply(p, x, n_layers):
+    for i in range(n_layers):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _fit(loss_fn, params, steps, lr=0.01, wd=1e-4):
+    tc = TrainConfig(learning_rate=lr, weight_decay=wd, grad_clip=0.0,
+                     schedule="constant")
+    state = adamw_init(params, tc)
+
+    @jax.jit
+    def step(params, state):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = adamw_update(grads, state, params, tc, lr)
+        return params, state, loss
+
+    for _ in range(steps):
+        params, state, _ = step(params, state)
+    return params
+
+
+# ----------------------------------------------------------------- GLNN [39]
+@dataclasses.dataclass
+class BaselineResult:
+    acc: float
+    macs: float          # per node, total
+    fp_macs: float       # per node, feature processing
+    time_s: float
+    fp_time_s: float
+
+
+def run_glnn(cfg: GNNConfig, g: Graph, teacher_params, *, width_mult: int = 4,
+             epochs: int = 300, temperature: float = 1.2, lam: float = 0.9,
+             seed: int = 0) -> BaselineResult:
+    """Distill f^(k) (teacher) into a plain MLP over raw features; inference
+    touches NO edges (the paper's extreme case of NAI with order 0)."""
+    g_train = g.train_subgraph()
+    series = propagated_series(g_train, g.features, cfg.k, cfg.r)
+    feats = jnp.asarray(np.stack(series))
+    vtrain = np.concatenate([g.train_idx, g.unlabeled_idx])
+    teacher = apply_classifier(cfg, teacher_params, feats[:, vtrain], cfg.k)
+
+    dims = [cfg.feat_dim, cfg.hidden * width_mult, cfg.num_classes]
+    params = init_tree(jax.random.PRNGKey(seed), _mlp_defs(dims), "float32")
+    x_train = jnp.asarray(g.features[vtrain])
+    y_l = jnp.asarray(g.labels[g.train_idx])
+    x_l = jnp.asarray(g.features[g.train_idx])
+    labels_vt = jnp.asarray(g.labels[vtrain])
+
+    def loss(p):
+        z = _mlp_apply(p, x_train, 2)
+        kd = offline_loss(z, teacher, labels_vt, temperature=temperature,
+                          lam=1.0)
+        ce = hard_ce(_mlp_apply(p, x_l, 2), y_l)
+        return lam * kd + (1 - lam) * ce
+
+    params = _fit(loss, params, epochs)
+
+    t0 = time.perf_counter()
+    z = np.asarray(_mlp_apply(params, jnp.asarray(g.features[g.test_idx]), 2))
+    dt = time.perf_counter() - t0
+    acc = float((z.argmax(-1) == g.labels[g.test_idx]).mean())
+    macs = sum(a * b for a, b in zip(dims[:-1], dims[1:]))
+    return BaselineResult(acc=acc, macs=macs, fp_macs=0.0, time_s=dt,
+                          fp_time_s=0.0)
+
+
+# ------------------------------------------------------------- TinyGNN [34]
+def run_tinygnn(cfg: GNNConfig, g: Graph, teacher_params, *, epochs: int = 300,
+                temperature: float = 1.2, lam: float = 0.9,
+                seed: int = 0) -> BaselineResult:
+    """Single-hop GNN student with a peer-aware self-attention module,
+    distilled from f^(k). Captures the paper's trade-off: 1-hop propagation
+    + an attention module whose extra MACs dominate on high-dim features."""
+    g_train = g.train_subgraph()
+    series = propagated_series(g_train, g.features, cfg.k, cfg.r)
+    feats = jnp.asarray(np.stack(series))
+    vtrain = np.concatenate([g.train_idx, g.unlabeled_idx])
+    teacher = apply_classifier(cfg, teacher_params, feats[:, vtrain], cfg.k)
+
+    f, h, c = cfg.feat_dim, cfg.hidden, cfg.num_classes
+    defs = {
+        "att_q": ParamDef((f, h), (None, None)),
+        "att_k": ParamDef((f, h), (None, None)),
+        "att_v": ParamDef((f, f), (None, None)),
+        **_mlp_defs([f, h, c]),
+    }
+    params = init_tree(jax.random.PRNGKey(seed), defs, "float32")
+
+    def peer_aware(p, x1, x0):
+        """x1: 1-hop propagated; x0: raw. Peer attention between the two
+        views (the PAM module, reduced to the 2-view case)."""
+        q = x0 @ p["att_q"]
+        kk = x1 @ p["att_k"]
+        a = jax.nn.sigmoid(jnp.sum(q * kk, -1, keepdims=True)
+                           / jnp.sqrt(float(q.shape[-1])))
+        return a * (x1 @ p["att_v"]) + (1 - a) * x0
+
+    def forward(p, x1, x0):
+        return _mlp_apply(p, peer_aware(p, x1, x0), 2)
+
+    x1_t = feats[1][jnp.asarray(vtrain)]
+    x0_t = feats[0][jnp.asarray(vtrain)]
+    labels_vt = jnp.asarray(g.labels[vtrain])
+
+    def loss(p):
+        z = forward(p, x1_t, x0_t)
+        kd = offline_loss(z, teacher, labels_vt, temperature=temperature,
+                          lam=1.0)
+        return lam * kd + (1 - lam) * hard_ce(z, labels_vt)
+
+    params = _fit(loss, params, epochs)
+
+    # inference: 1-hop propagation for test nodes + PAM + MLP
+    t0 = time.perf_counter()
+    series_full = propagated_series(g, g.features, 1, cfg.r)
+    fp_dt = time.perf_counter() - t0
+    x1 = jnp.asarray(series_full[1][g.test_idx])
+    x0 = jnp.asarray(g.features[g.test_idx])
+    z = np.asarray(forward(params, x1, x0))
+    dt = time.perf_counter() - t0
+    acc = float((z.argmax(-1) == g.labels[g.test_idx]).mean())
+
+    deg = float(g.degrees.mean() + 1)
+    fp_macs = deg * f + 2 * (f * h) + f * f          # 1-hop spmm + PAM
+    cls_macs = f * h + h * c
+    return BaselineResult(acc=acc, macs=fp_macs + cls_macs, fp_macs=fp_macs,
+                          time_s=dt, fp_time_s=fp_dt)
+
+
+# --------------------------------------------------------- quantization [25]
+def _fixed_order_inference(cfg: GNNConfig, g: Graph, params,
+                           batch_size: int = 500) -> BaselineResult:
+    """Fixed k-order propagation through the SAME inductive batched pipeline
+    as NAI (support sampling per batch) — NAP with T_s=0 degenerates to
+    exactly this, so MAC/time accounting is apples-to-apples (paper §4.1)."""
+    from repro.gnn.nai import NAIConfig, infer_all
+    nai = NAIConfig(t_s=0.0, t_min=1, t_max=cfg.k, batch_size=batch_size)
+    res = infer_all(cfg, nai, params, g)
+    acc = float((res.predictions == g.labels[g.test_idx]).mean())
+    return BaselineResult(acc=acc, macs=res.total_macs, fp_macs=res.fp_macs,
+                          time_s=res.wall_time_s, fp_time_s=res.fp_time_s)
+
+
+def run_quantized(cfg: GNNConfig, g: Graph, params, *, seed: int = 0
+                  ) -> BaselineResult:
+    """Post-training INT8 quantization of the classifiers: weights are
+    fake-quantized per-tensor; feature propagation stays FP32 (the paper's
+    point: quantization cannot touch feature-processing cost, so fp_macs
+    equal vanilla's)."""
+    def q(x):
+        x = np.asarray(x)
+        s = np.abs(x).max() / 127.0 + 1e-12
+        return jnp.asarray((np.round(x / s).clip(-127, 127) * s)
+                           .astype(np.float32))
+
+    qcls = {l: jax.tree.map(q, p) for l, p in params["cls"].items()}
+    return _fixed_order_inference(cfg, g, dict(params, cls=qcls))
+
+
+def run_vanilla(cfg: GNNConfig, g: Graph, params) -> BaselineResult:
+    """The vanilla base model: full k-order propagation for every node."""
+    return _fixed_order_inference(cfg, g, params)

@@ -1,0 +1,132 @@
+"""NAI training procedure (paper Fig. 1 left): base-model training followed
+by Inception Distillation (offline Eq. 2-4, then online Eq. 5-6)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import TrainConfig
+from repro.core.inception_distill import (ensemble_teacher, hard_ce,
+                                          offline_loss, online_loss, soft_ce)
+from repro.gnn.graph import Graph, propagated_series
+from repro.gnn.models import GNNConfig, apply_classifier, init_classifiers
+from repro.nn.params import ParamDef, init_tree
+from repro.optim import adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class DistillConfig:
+    epochs_base: int = 300
+    epochs_offline: int = 200
+    epochs_online: int = 200
+    lr: float = 0.01
+    weight_decay: float = 1e-4
+    temperature: float = 1.2      # T   (paper: [1, 2])
+    lam: float = 0.9              # λ   (paper: online best in [0.8, 1])
+    lam_off: float = 0.5          # λ for offline (paper: balance carefully)
+    ensemble_r: int = 2           # r
+    seed: int = 0
+
+
+def _tc(dc: DistillConfig) -> TrainConfig:
+    return TrainConfig(learning_rate=dc.lr, weight_decay=dc.weight_decay,
+                       grad_clip=0.0, warmup_steps=0,
+                       total_steps=max(dc.epochs_base, 1), schedule="constant")
+
+
+def _fit(loss_fn, params, steps, tc, key):
+    state = adamw_init(params, tc)
+
+    @jax.jit
+    def step(params, state, key):
+        key, sub = jax.random.split(key)
+        loss, grads = jax.value_and_grad(loss_fn)(params, sub)
+        params, state, _ = adamw_update(grads, state, params, tc,
+                                        tc.learning_rate)
+        return params, state, key, loss
+
+    loss = jnp.inf
+    for _ in range(steps):
+        params, state, key, loss = step(params, state, key)
+    return params, float(loss)
+
+
+def train_nai(cfg: GNNConfig, g: Graph, dc: DistillConfig = DistillConfig()
+              ) -> Tuple[Dict, Dict]:
+    """Returns (params, info). params = {'cls': {l: tree}, 'ens_s': (c,1)}."""
+    key = jax.random.PRNGKey(dc.seed)
+    g_train = g.train_subgraph()
+    series = propagated_series(g_train, g.features, cfg.k, cfg.r)
+    feats = jnp.asarray(np.stack(series))                    # (k+1, n, f)
+    labels = jnp.asarray(g.labels)
+    vl = jnp.asarray(g.train_idx)                            # labeled V_l
+    vtrain = jnp.asarray(np.concatenate([g.train_idx, g.unlabeled_idx]))
+    tc = _tc(dc)
+
+    key, k_init, k_base = jax.random.split(key, 3)
+    cls = init_classifiers(cfg, k_init)
+    info: Dict = {}
+
+    feats_vl = feats[:, vl]
+    feats_vt = feats[:, vtrain]
+    y_vl = labels[vl]
+
+    # ---- 1. base model f^(k) (Eq. 2)
+    def base_loss(p, rng):
+        z = apply_classifier(cfg, p, feats_vl, cfg.k, key=rng)
+        return hard_ce(z, y_vl)
+
+    cls[cfg.k], l0 = _fit(base_loss, cls[cfg.k], dc.epochs_base, tc, k_base)
+    info["base_loss"] = l0
+
+    # ---- 2. offline distillation into f^(l), l < k (Eqs. 3-4)
+    teacher_vt = apply_classifier(cfg, cls[cfg.k], feats_vt, cfg.k)
+    teacher_vl = apply_classifier(cfg, cls[cfg.k], feats_vl, cfg.k)
+    for l in range(1, cfg.k):
+        key, k_off = jax.random.split(key)
+
+        def off_loss(p, rng, l=l):
+            z_vt = apply_classifier(cfg, p, feats_vt, l, key=rng)
+            z_vl = apply_classifier(cfg, p, feats_vl, l)
+            kd = offline_loss(z_vt, teacher_vt, labels[vtrain],
+                              temperature=dc.temperature, lam=1.0)
+            ce = hard_ce(z_vl, y_vl)
+            return (1 - dc.lam_off) * ce + dc.lam_off * kd
+
+        cls[l], li = _fit(off_loss, cls[l], dc.epochs_offline, tc, k_off)
+        info[f"offline_loss_{l}"] = li
+
+    # ---- 3. online distillation with the self-attention ensemble (Eqs. 5-6)
+    ens_s = init_tree(key, ParamDef((cfg.num_classes, 1), (None, None),
+                                    "small"), "float32")
+    joint = {"cls": cls, "ens_s": ens_s}
+    r = min(dc.ensemble_r, cfg.k)
+
+    def on_loss(p, rng):
+        zs = {l: apply_classifier(cfg, p["cls"][l], feats_vt, l)
+              for l in range(1, cfg.k + 1)}
+        pool = [zs[l] for l in range(cfg.k - r + 1, cfg.k + 1)]
+        ens = ensemble_teacher(pool, p["ens_s"])
+        total = 0.0
+        for l in range(1, cfg.k):
+            # L_on = (1-λ)·L_c(V_l, hard labels) + λ·T²·L_e(V_train, ensemble)
+            kd = soft_ce(zs[l], ens, dc.temperature)
+            z_vl = apply_classifier(cfg, p["cls"][l], feats_vl, l, key=rng)
+            total += dc.lam * dc.temperature**2 * kd \
+                + (1 - dc.lam) * hard_ce(z_vl, y_vl)
+        return total / max(cfg.k - 1, 1)
+
+    key, k_on = jax.random.split(key)
+    joint, lo = _fit(on_loss, joint, dc.epochs_online, tc, k_on)
+    info["online_loss"] = lo
+    return joint, info
+
+
+def evaluate_classifier(cfg: GNNConfig, params, feats, labels, idx, l) -> float:
+    z = apply_classifier(cfg, params, jnp.asarray(feats)[:, idx], l)
+    pred = jnp.argmax(z, -1)
+    return float(jnp.mean((pred == jnp.asarray(labels)[idx]).astype(jnp.float32)))

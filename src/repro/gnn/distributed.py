@@ -1,0 +1,101 @@
+"""Distributed feature propagation: the paper's substrate at pod scale.
+
+Node-partitioned SpMM under `shard_map`: nodes (and their in-edges) are
+split across the 'data' axis; features are split across 'model'. One
+propagation step is
+
+    out[i] = sum_j coef(j->i) x[j]
+
+with x gathered across node shards (`all_gather` over 'data') and the
+feature dim staying sharded — each device reduces its own (rows x feature
+slice) block. For the paper's graphs (feature dim 100-500, nodes in the
+millions) the gather is the right trade: x is (n, f/16) per device and the
+adjacency never moves.
+
+The NAP loop composes on top: per-shard exit masks feed the same
+`active_blocks_from_nodes` predication the Pallas kernel consumes; the
+distance reduction is local (features sharded), followed by a psum over
+'model' for the l2 norm.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.gnn.graph import Graph, edge_coefficients
+
+
+def partition_graph(g: Graph, n_shards: int, r: float = 0.5):
+    """Split nodes contiguously into `n_shards`; each shard keeps the edges
+    whose DESTINATION lands in the shard (src stays global). Returns padded
+    per-shard edge arrays (stacked, shard-major) + padded feature matrix."""
+    n_pad = -(-g.n // n_shards) * n_shards
+    rows = n_pad // n_shards
+    coef = edge_coefficients(g, r)
+    shard_of = g.dst // rows
+    counts = np.bincount(shard_of, minlength=n_shards)
+    e_pad = -(-counts.max() // 8) * 8
+
+    src = np.zeros((n_shards, e_pad), np.int32)
+    dst = np.zeros((n_shards, e_pad), np.int32)     # LOCAL row within shard
+    cf = np.zeros((n_shards, e_pad), np.float32)    # 0 padding = no-op edge
+    for s in range(n_shards):
+        m = shard_of == s
+        k = int(m.sum())
+        src[s, :k] = g.src[m]
+        dst[s, :k] = g.dst[m] - s * rows
+        cf[s, :k] = coef[m]
+    x = np.zeros((n_pad, g.features.shape[1]), np.float32)
+    x[:g.n] = g.features
+    return src, dst, cf, x, rows
+
+
+def make_distributed_propagate(mesh, rows: int, n_shards: int):
+    """Returns a jitted `propagate(src, dst, coef, x) -> x'` running under
+    shard_map on (data=node shards, model=feature shards)."""
+
+    def local_step(src, dst, coef, x):
+        # src/dst/coef: (1, E) this shard's edges; x: (rows_total, f_loc)
+        src, dst, coef = src[0], dst[0], coef[0]
+        x_full = jax.lax.all_gather(x, "data", axis=0, tiled=True)
+        contrib = coef[:, None] * x_full[src]
+        return jax.ops.segment_sum(contrib, dst, num_segments=rows)
+
+    return jax.jit(shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P("data", None), P("data", None), P("data", None),
+                  P("data", "model")),
+        out_specs=P("data", "model")))
+
+
+def distributed_series(mesh, g: Graph, k: int, r: float = 0.5):
+    """[X^(0..k)] computed with the distributed step; host-verifiable."""
+    n_shards = mesh.shape["data"]
+    src, dst, cf, x, rows = partition_graph(g, n_shards, r)
+    prop = make_distributed_propagate(mesh, rows, n_shards)
+    srcj, dstj, cfj = (jnp.asarray(a) for a in (src, dst, cf))
+    out = [jnp.asarray(x)]
+    for _ in range(k):
+        out.append(prop(srcj, dstj, cfj, out[-1]))
+    return out
+
+
+def distributed_nap_distances(mesh, x, x_inf):
+    """Per-node ||x - x_inf|| with features sharded over 'model': local
+    partial sum of squares + psum over the feature axis."""
+
+    def local(x, xi):
+        d2 = jnp.sum(jnp.square(x - xi), axis=1, keepdims=True)
+        return jax.lax.psum(d2, "model")
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P("data", "model"), P("data", "model")),
+                   out_specs=P("data", None))
+    return jnp.sqrt(fn(x, x_inf)[:, 0])

@@ -1,0 +1,6 @@
+from repro.kernels.flash_attention.kernel import BK, BQ, flash_attention
+from repro.kernels.flash_attention.ops import gqa_flash_attention
+from repro.kernels.flash_attention.ref import ref_attention
+
+__all__ = ["BK", "BQ", "flash_attention", "gqa_flash_attention",
+           "ref_attention"]

@@ -1,0 +1,5 @@
+from repro.kernels.nap_exit.kernel import FB, NB, nap_exit
+from repro.kernels.nap_exit.ops import exit_decision
+from repro.kernels.nap_exit.ref import ref_nap_exit
+
+__all__ = ["FB", "NB", "nap_exit", "exit_decision", "ref_nap_exit"]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the nap_exit kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.nap_exit.kernel import NB
+
+
+def ref_nap_exit(x, x_inf, active, t_s):
+    diff = (x - x_inf).astype(jnp.float32)
+    dist2 = jnp.sum(diff * diff, axis=1, keepdims=True)
+    was_active = active != 0
+    exits = was_active & (dist2 < t_s * t_s)
+    still = was_active & ~exits
+    blk = still.reshape(-1, NB).any(axis=1, keepdims=True).astype(jnp.int32)
+    return dist2, exits.astype(jnp.int32), blk

@@ -1,0 +1,8 @@
+from repro.kernels.spmm.kernel import CB, FB, RB, spmm_block_ell
+from repro.kernels.spmm.ops import (BlockEll, active_blocks_from_nodes,
+                                    build_block_ell, pad_features, spmm)
+from repro.kernels.spmm.ref import ref_spmm_dense, ref_spmm_tiles
+
+__all__ = ["CB", "FB", "RB", "spmm_block_ell", "BlockEll",
+           "active_blocks_from_nodes", "build_block_ell", "pad_features",
+           "spmm", "ref_spmm_dense", "ref_spmm_tiles"]

@@ -1,0 +1,79 @@
+"""Block-ELL SpMM Pallas kernel with NAP row-block predication.
+
+TPU adaptation of the paper's sparse feature propagation (DESIGN.md §3):
+the adjacency is tiled into dense (RB, CB) coefficient tiles (block-ELL:
+a fixed budget of `max_tb` tiles per row block, zero-padded). The kernel is
+a block-sparse matmul driven by scalar-prefetched tile column indices — the
+standard TPU pattern for data-dependent addressing (cf. megablox). NAP's
+early exit feeds the `active` vector: a row block whose nodes have ALL
+exited is skipped entirely (`@pl.when`), so saved compute scales with the
+fraction of exited tiles — the paper's O(qmf) at tile granularity.
+
+Grid: (row_blocks, feature_blocks, max_tiles_per_row_block); the tile loop
+is innermost so the output block stays resident in VMEM while accumulating.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+RB = 8      # rows per adjacency tile (sublane-aligned)
+CB = 128    # cols per adjacency tile (lane-aligned)
+FB = 128    # feature block
+
+
+def _kernel(tile_col_ref, active_ref, valid_ref,   # scalar prefetch
+            tiles_ref, x_ref, out_ref):
+    rb = pl.program_id(0)
+    t = pl.program_id(2)
+    ntb = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    is_active = active_ref[rb] != 0
+    is_valid = valid_ref[rb * ntb + t] != 0
+
+    @pl.when(is_active & is_valid)
+    def _acc():
+        a = tiles_ref[0, 0]                      # (RB, CB)
+        x = x_ref[...]                           # (CB, FB)
+        out_ref[...] += jnp.dot(a, x, preferred_element_type=jnp.float32
+                                ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmm_block_ell(tiles, tile_col, valid, active, x, *, interpret=True):
+    """tiles (n_rb, max_tb, RB, CB) f32 adjacency coefficient tiles;
+    tile_col (n_rb, max_tb) int32 column-block index per tile;
+    valid (n_rb, max_tb) int32 1 for real tiles, 0 for padding;
+    active (n_rb,) int32 NAP row-block predicate;
+    x (n_cb*CB, F) features (F % FB == 0).
+    Returns out (n_rb*RB, F)."""
+    n_rb, max_tb = tile_col.shape
+    n, F = x.shape
+    assert n % CB == 0 and F % FB == 0, (n, F)
+
+    grid = (n_rb, F // FB, max_tb)
+    flat_cols = tile_col.reshape(-1).astype(jnp.int32)
+    flat_valid = valid.reshape(-1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, RB, CB), lambda rb, fb, t, *_: (rb, t, 0, 0)),
+            pl.BlockSpec((CB, FB),
+                         lambda rb, fb, t, cols, active, valid_s: (cols[rb * pl.num_programs(2) + t], fb)),
+        ],
+        out_specs=pl.BlockSpec((RB, FB), lambda rb, fb, t, *_: (rb, fb)),
+    )
+    out_shape = jax.ShapeDtypeStruct((n_rb * RB, F), x.dtype)
+    fn = pl.pallas_call(_kernel, grid_spec=grid_spec, out_shape=out_shape,
+                        interpret=interpret)
+    return fn(flat_cols, active.astype(jnp.int32), flat_valid, tiles, x)

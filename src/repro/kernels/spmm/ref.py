@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the block-ELL SpMM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.spmm.kernel import CB, RB
+
+
+def ref_spmm_dense(src, dst, coef, n_pad, x, active):
+    """Dense-materialized Â @ x with inactive row blocks zeroed.
+    src/dst/coef: edge list (numpy); x (n_pad, F); active (n_rb,)."""
+    A = np.zeros((n_pad, n_pad), np.float32)
+    A[dst, src] = coef          # assumes deduped edges
+    out = jnp.asarray(A) @ x.astype(jnp.float32)
+    row_active = jnp.repeat(jnp.asarray(active) != 0, RB,
+                            total_repeat_length=n_pad)
+    return jnp.where(row_active[:, None], out, 0.0).astype(x.dtype)
+
+
+def ref_spmm_tiles(tiles, tile_col, valid, active, x):
+    """Oracle on the block-ELL operands themselves (catches converter bugs
+    separately from kernel bugs)."""
+    n_rb, max_tb = tile_col.shape
+    F = x.shape[1]
+    out = jnp.zeros((n_rb * RB, F), jnp.float32)
+    xs = x.astype(jnp.float32)
+    for rb in range(n_rb):
+        if int(active[rb]) == 0:
+            continue
+        acc = jnp.zeros((RB, F), jnp.float32)
+        for t in range(max_tb):
+            if int(valid[rb, t]) == 0:
+                continue
+            cb = int(tile_col[rb, t])
+            acc = acc + tiles[rb, t].astype(jnp.float32) @ xs[cb * CB:(cb + 1) * CB]
+        out = out.at[rb * RB:(rb + 1) * RB].set(acc)
+    return out.astype(x.dtype)

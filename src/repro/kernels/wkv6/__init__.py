@@ -1,0 +1,5 @@
+from repro.kernels.wkv6.kernel import CHUNK, wkv6
+from repro.kernels.wkv6.ops import wkv6_heads
+from repro.kernels.wkv6.ref import ref_wkv6_sequential
+
+__all__ = ["CHUNK", "wkv6", "wkv6_heads", "ref_wkv6_sequential"]

@@ -1,0 +1,19 @@
+"""Oracle for the WKV6 kernel: the direct per-timestep recurrence (the
+mathematical definition of RWKV6 time mixing)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def ref_wkv6_sequential(r, k, v, logw, u):
+    """Direct recurrence, numpy f64. r/k/v/logw (BH, T, hd); u (BH, hd)."""
+    r, k, v, logw, u = (np.asarray(a, np.float64) for a in (r, k, v, logw, u))
+    BH, T, hd = r.shape
+    out = np.zeros((BH, T, hd))
+    for b in range(BH):
+        S = np.zeros((hd, hd))
+        for t in range(T):
+            kv = np.outer(k[b, t], v[b, t])
+            out[b, t] = r[b, t] @ (S + u[b][:, None] * kv)
+            S = np.exp(logw[b, t])[:, None] * S + kv
+    return out.astype(np.float32)

@@ -1,0 +1,4 @@
+"""Launchers: mesh construction, multi-pod dry-run, training, serving,
+roofline extraction. NOTE: repro.launch.dryrun force-sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 at import — never
+import it from tests or benches that need the real single-device CPU."""

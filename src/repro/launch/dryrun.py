@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, and record roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+The XLA_FLAGS assignment above MUST precede every other import — jax locks
+the device count at first initialization.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import INPUT_SHAPES, TPU_V5E, TrainConfig
+from repro.configs import ARCHS, get_config, input_shardings, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (active_params, model_flops,
+                                   roofline_terms)
+from repro.models import decoder_lm as M
+from repro.nn.params import count_params
+from repro.optim import adamw_init, adamw_update, make_schedule
+from repro.sharding import named, resolve
+from repro.sharding import spec as logical_spec
+
+
+def _train_cfg(cfg) -> TrainConfig:
+    n = count_params(M.model_defs(cfg))
+    # >60B params: bf16 Adam moments, else f32 (recorded in EXPERIMENTS.md)
+    mdt = "bfloat16" if n > 60e9 else "float32"
+    return TrainConfig(moment_dtype=mdt)
+
+
+def build_train_step(cfg):
+    tc = _train_cfg(cfg)
+    sched = make_schedule(tc)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            M.loss_fn, argnums=1, has_aux=True)(cfg, params, batch)
+        lr = sched(opt_state["count"])
+        params, opt_state, om = adamw_update(grads, opt_state, params, tc, lr)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step, tc
+
+
+def abstract_opt_state(cfg, tc):
+    ab = M.abstract_params(cfg)
+    mdt = jnp.dtype(tc.moment_dtype)
+    mom = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, mdt), ab)
+    return {"mu": mom, "nu": mom,
+            "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def opt_state_specs(cfg):
+    ps = M.param_specs(cfg)
+    return {"mu": ps, "nu": ps, "count": logical_spec()}
+
+
+def _named_tree(mesh, spec_tree_, abstract_tree_):
+    """PartitionSpec tree + matching abstract tree -> NamedSharding tree,
+    fitting every spec to its leaf's shape (divisibility fallback)."""
+    is_spec = lambda x: isinstance(x, jax.sharding.PartitionSpec)
+    specs, treedef = jax.tree.flatten(spec_tree_, is_leaf=is_spec)
+    abs_ = treedef.flatten_up_to(abstract_tree_)
+    return treedef.unflatten(
+        [named(mesh, s, a.shape) for s, a in zip(specs, abs_)])
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                compile_: bool = True, verbose: bool = True):
+    """Returns a result record dict (or raises)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    in_specs = input_specs(cfg, shape)
+    in_sh = input_shardings(cfg, shape)
+    batch_sh = {k: named(mesh, v, in_specs[k].shape)
+                for k, v in in_sh.items()}
+    ab_params = M.abstract_params(cfg)
+    pspecs = _named_tree(mesh, M.param_specs(cfg), ab_params)
+
+    with mesh:
+        if shape.mode == "train":
+            step, tc = build_train_step(cfg)
+            ab_opt = abstract_opt_state(cfg, tc)
+            ospecs = _named_tree(mesh, opt_state_specs(cfg), ab_opt)
+            fn = jax.jit(step,
+                         in_shardings=(pspecs, ospecs, batch_sh),
+                         out_shardings=(pspecs, ospecs, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(ab_params, ab_opt, in_specs)
+        elif shape.mode == "prefill":
+            def prefill(params, batch):
+                return M.prefill_step(cfg, params, batch["tokens"],
+                                      frontend=batch.get("frontend"))
+            ab_c = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+            csp = _named_tree(mesh, M.cache_specs(cfg, shape.global_batch,
+                                                  shape.seq_len), ab_c)
+            out_sh = (named(mesh, logical_spec("batch", "vocab"),
+                            (shape.global_batch, cfg.vocab_size)), csp)
+            fn = jax.jit(prefill, in_shardings=(pspecs, batch_sh),
+                         out_shardings=out_sh)
+            lowered = fn.lower(ab_params, in_specs)
+        else:  # decode
+            L = M._decode_len(cfg, shape.seq_len)
+            ab_cache = M.abstract_cache(cfg, shape.global_batch, L)
+            csp = _named_tree(mesh, M.cache_specs(cfg, shape.global_batch, L),
+                              ab_cache)
+
+            def serve_step(params, cache, batch, pos):
+                return M.decode_step(cfg, params, cache, batch["tokens"], pos)
+            out_sh = (named(mesh, logical_spec("batch", None, "vocab"),
+                            (shape.global_batch, 1, cfg.vocab_size)), csp)
+            fn = jax.jit(serve_step,
+                         in_shardings=(pspecs, csp, batch_sh,
+                                       named(mesh, logical_spec())),
+                         out_shardings=out_sh,
+                         donate_argnums=(1,))
+            lowered = fn.lower(ab_params, ab_cache, in_specs,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+
+        t_lower = time.time() - t0
+        rec = {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "chips": chips, "mode": shape.mode,
+            "lower_s": round(t_lower, 1),
+        }
+        if not compile_:
+            return rec
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+
+    n_params = count_params(M.model_defs(cfg))
+    n_active = active_params(cfg, n_params)
+    terms = roofline_terms(cost, hlo, chips=chips)
+    mf = model_flops(cfg, shape, n_params, n_active)
+    terms["model_flops"] = mf
+    terms["useful_ratio"] = mf / terms["hlo_flops"] if terms["hlo_flops"] else 0.0
+
+    def _mem_attr(name):
+        v = getattr(mem, name, None)
+        return int(v) if v is not None else None
+
+    rec.update({
+        "params": n_params,
+        "active_params": n_active,
+        "memory": {
+            "argument_bytes": _mem_attr("argument_size_in_bytes"),
+            "output_bytes": _mem_attr("output_size_in_bytes"),
+            "temp_bytes": _mem_attr("temp_size_in_bytes"),
+            "generated_code_bytes": _mem_attr("generated_code_size_in_bytes"),
+            "alias_bytes": _mem_attr("alias_size_in_bytes"),
+        },
+        "roofline": terms,
+    })
+    # per-chip residency: arguments are sharded; temp is per-program
+    arg_b = rec["memory"]["argument_bytes"] or 0
+    tmp_b = rec["memory"]["temp_bytes"] or 0
+    rec["memory"]["per_chip_gb"] = round((arg_b + tmp_b) / chips / 1e9, 3)
+    rec["fits_hbm"] = rec["memory"]["per_chip_gb"] <= TPU_V5E.hbm_bytes / 1e9
+
+    if verbose:
+        print(f"[{arch} x {shape_name} x {rec['mesh']}] "
+              f"lower={rec['lower_s']}s compile={rec.get('compile_s')}s")
+        print("  memory_analysis:", rec["memory"])
+        print("  cost_analysis: flops=%.3e bytes=%.3e" %
+              (terms["hlo_flops"], terms["hlo_bytes_per_chip"]))
+        print("  roofline: compute=%.3fms memory=%.3fms collective=%.3fms"
+              " dominant=%s useful=%.2f" %
+              (1e3 * terms["t_compute_s"], 1e3 * terms["t_memory_s"],
+               1e3 * terms["t_collective_s"], terms["dominant"],
+               terms["useful_ratio"]))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-compile", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2pod' if mp else '1pod'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip] {tag} (exists)")
+                    continue
+                try:
+                    rec = lower_combo(arch, shape, multi_pod=mp,
+                                      compile_=not args.no_compile)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((tag, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err)
+        raise SystemExit(1)
+    print("dry-run complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run forces 512 host
+devices via XLA_FLAGS before any jax initialization."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips (one TPU v5e pod) or 2x16x16 = 512 chips (2 pods).
+    Axes: data (batch / FSDP) x model (TP); `pod` is pure data parallel."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 1):
+    """Tiny mesh over whatever devices exist (tests)."""
+    dev = jax.devices()[:n_devices]
+    return jax.sharding.Mesh(
+        __import__("numpy").array(dev).reshape(1, len(dev)),
+        ("data", "model"))

@@ -1,0 +1,114 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs  / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes  / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+cost_analysis() supplies FLOPs and bytes; collective bytes are parsed from
+the HLO text (operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops)."""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.common import TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        size = 1
+        if dims:
+            for d in dims.split(","):
+                size *= int(d)
+        total += size * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind. Shapes in the HLO are
+    per-participant (already sharded), i.e. bytes moved per device."""
+    out = {k: 0 for k in _COLLECTIVES}
+    seen_start = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+def roofline_terms(cost: dict, hlo_text: str, *, chips: int,
+                   hw=TPU_V5E) -> Dict[str, float]:
+    """Three-term roofline from the compiled HLO.
+
+    Primary source is the loop-aware HLO analysis (repro.launch.hlo_analysis)
+    because XLA's cost_analysis() counts while bodies once and reports
+    per-device numbers — fatal for scan-based trunks. All analyzed
+    quantities are PER-DEVICE; `hlo_flops` is reported as the global sum
+    (x chips) for comparability with MODEL_FLOPS."""
+    from repro.launch.hlo_analysis import analyze
+    st = analyze(hlo_text)
+
+    flops_dev = st.dot_flops
+    hbm_dev = st.traffic_bytes
+    coll_dev = st.collective_total
+
+    t_compute = flops_dev / hw.peak_flops
+    t_memory = hbm_dev / hw.hbm_bw
+    t_collective = coll_dev / hw.ici_bw
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)], key=lambda kv: kv[1])[0]
+    return {
+        "hlo_flops": flops_dev * chips,
+        "hlo_flops_per_chip": flops_dev,
+        "hlo_bytes_per_chip": hbm_dev,
+        "collective_bytes_per_chip": float(coll_dev),
+        "collectives": {k: float(v) for k, v in st.collective_bytes.items()},
+        "xla_cost_flops_per_chip_loopless": float(cost.get("flops", 0.0)),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+    }
+
+
+def model_flops(cfg, shape, n_params: int, n_active_params: int) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (forward-only), N = active
+    params, D = tokens processed this step."""
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active_params * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active_params * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active_params * tokens
+
+
+def active_params(cfg, n_params: int) -> int:
+    """Subtract the non-routed share of MoE expert weights."""
+    if not cfg.num_experts:
+        return n_params
+    per_expert = cfg.d_model * cfg.d_ff * (3 if cfg.mlp_kind in
+                                           ("swiglu", "geglu") else 2)
+    moe_total = cfg.num_layers * cfg.num_experts * per_expert
+    moe_active = cfg.num_layers * cfg.experts_per_token * per_expert
+    return n_params - moe_total + moe_active

@@ -1,0 +1,135 @@
+"""Training launcher.
+
+Two modes:
+  * LM:   train any assigned architecture (reduced or full) on the synthetic
+          token stream with pjit over the available mesh, AdamW, remat,
+          checkpointing.
+  * GNN:  the paper's training procedure (base model + Inception
+          Distillation) on a synthetic graph dataset.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-7b --smoke \
+        --steps 200 --batch 8 --seq 128
+    PYTHONPATH=src python -m repro.launch.train --gnn pubmed-like --k 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.common import TrainConfig
+from repro.configs import ARCHS, get_config, smoke
+from repro.data import synthetic_stream
+from repro.models import decoder_lm as M
+from repro.nn.params import count_params
+from repro.optim import adamw_init, adamw_update, make_schedule
+
+
+def train_lm(args) -> None:
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke(cfg)
+    tc = TrainConfig(learning_rate=args.lr, warmup_steps=args.steps // 10,
+                     total_steps=args.steps, weight_decay=0.01)
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    print(f"[train] {cfg.name} params={count_params(params):,}")
+    opt = adamw_init(params, tc)
+    sched = make_schedule(tc)
+
+    step_count = 0
+    if args.resume and os.path.exists(args.ckpt):
+        state, step_count = load_checkpoint(args.ckpt,
+                                            {"params": params, "opt": opt})
+        params, opt = state["params"], state["opt"]
+        print(f"[train] resumed from step {step_count}")
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            M.loss_fn, argnums=1, has_aux=True)(cfg, params, batch)
+        params, opt, om = adamw_update(grads, opt, params, tc,
+                                       sched(opt["count"]))
+        metrics.update(om)
+        return params, opt, metrics
+
+    stream = synthetic_stream(args.seed, args.batch, args.seq,
+                              cfg.vocab_size, cfg)
+    t0 = time.time()
+    for i in range(step_count, args.steps):
+        raw = next(stream)
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        params, opt, metrics = step(params, opt, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(metrics['loss']):.4f} "
+                  f"lm={float(metrics['lm_loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"({(time.time() - t0):.1f}s)", flush=True)
+        if args.ckpt and i > 0 and i % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, {"params": params, "opt": opt}, i)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, {"params": params, "opt": opt}, args.steps)
+        print(f"[train] checkpoint -> {args.ckpt}")
+
+
+def train_gnn(args) -> None:
+    from repro.gnn import (DistillConfig, GNNConfig, NAIConfig, accuracy,
+                          infer_all, load_dataset, train_nai)
+    g = load_dataset(args.gnn, scale=args.scale, seed=args.seed)
+    cfg = GNNConfig(args.base_model, g.features.shape[1], g.num_classes,
+                    k=args.k, hidden=args.hidden, mlp_layers=2, dropout=0.1)
+    dc = DistillConfig(epochs_base=args.epochs, epochs_offline=args.epochs // 2,
+                       epochs_online=args.epochs // 2)
+    print(f"[train-gnn] {args.gnn} n={g.n} m={g.num_edges} "
+          f"base={args.base_model} k={cfg.k}")
+    t0 = time.time()
+    params, info = train_nai(cfg, g, dc)
+    print(f"[train-gnn] done in {time.time() - t0:.1f}s: "
+          f"{ {k: round(v, 4) for k, v in info.items()} }")
+    res = infer_all(cfg, NAIConfig(t_s=args.t_s, t_min=1, t_max=cfg.k // 2 + 1,
+                                   batch_size=500), params, g)
+    print(f"[train-gnn] NAI acc={accuracy(res, g):.4f} "
+          f"fp_macs/node={res.fp_macs:.0f}")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, args.epochs)
+        print(f"[train-gnn] checkpoint -> {args.ckpt}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--gnn", default=None)
+    ap.add_argument("--base-model", default="sgc")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family variant (CPU)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--epochs", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--t-s", type=float, default=16.0)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    if args.gnn:
+        train_gnn(args)
+    elif args.arch:
+        train_lm(args)
+    else:
+        ap.error("need --arch or --gnn")
+
+
+if __name__ == "__main__":
+    main()

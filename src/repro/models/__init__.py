@@ -1,0 +1,3 @@
+from repro.models import decoder_lm
+
+__all__ = ["decoder_lm"]

@@ -1,0 +1,376 @@
+"""Generic scanned-trunk language model.
+
+One implementation covers every assigned architecture: the config's
+`pattern` (repeated) + `remainder` decide what each layer is. Stacked
+parameters + `jax.lax.scan` keep the HLO size independent of depth — an
+88-layer mistral-large lowers as fast as a 2-layer smoke model.
+
+Public API (all pure functions):
+    model_defs / init_params / param_specs / abstract_params
+    forward(cfg, params, batch, mode)      -> logits, aux, block_states
+    loss_fn(cfg, params, batch)            -> loss, metrics
+    init_cache / abstract_cache / cache_specs
+    decode_step(cfg, params, cache, tokens, pos, frontend) -> logits, cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import blocks as B
+from repro.nn.basic import apply_norm, norm_defs
+from repro.nn.params import ParamDef, abstract_tree, init_tree, spec_tree
+from repro.sharding import constrain, spec as logical_spec
+
+
+# ------------------------------------------------------------------ helpers
+def _stack_defs(defs, n: int):
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.logical,
+                           d.init, d.scale, d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _slice_tree(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+# ------------------------------------------------------------------- params
+def model_defs(cfg) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.vocab_size
+    R = cfg.pattern_repeats
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((V, d), ("vocab", "embed"), "embed"),
+        "blocks": tuple(_stack_defs(B.layer_defs(cfg, kind), R)
+                        for kind in cfg.pattern),
+        "rem": tuple(B.layer_defs(cfg, kind) for kind in cfg.remainder),
+        "final_norm": norm_defs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, V), ("embed", "vocab"))
+    if cfg.is_encdec:
+        defs["encoder"] = _stack_defs(B.layer_defs(cfg, "enc"),
+                                      cfg.encoder_layers)
+        defs["encoder_norm"] = norm_defs(cfg)
+    if cfg.adaptive.enabled and cfg.adaptive.exit_layers:
+        n = len(cfg.adaptive.exit_layers)
+        defs["exits"] = {
+            "adapter": ParamDef((n, d, d), ("exit", "embed", None), "small"),
+            "norm_scale": ParamDef((n, d), ("exit", "embed"), "ones"),
+            # self-attention ensemble weight vector s (Eq. 5 of the paper)
+            "ens_s": ParamDef((V, 1), ("vocab", None), "small"),
+        }
+    return defs
+
+
+def init_params(cfg, key):
+    return init_tree(key, model_defs(cfg), cfg.param_dtype)
+
+
+def param_specs(cfg):
+    return spec_tree(model_defs(cfg))
+
+
+def abstract_params(cfg):
+    return abstract_tree(model_defs(cfg), cfg.param_dtype)
+
+
+def _sinusoid(positions, d):
+    """positions (B,S) -> (B,S,d) fixed sinusoidal embedding."""
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                   * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed_tokens(cfg, params, tokens, positions):
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    if cfg.scale_embed_sqrt_d:
+        x = x * jnp.asarray(jnp.sqrt(jnp.float32(cfg.d_model)), dtype)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + _sinusoid(positions, cfg.d_model).astype(dtype)
+    return constrain(x, "batch", "seq", "embed")
+
+
+# ------------------------------------------------------------------ encoder
+def _run_encoder(cfg, params, frontend):
+    """Stub-frontend embeddings (B, Se, d) -> encoder output (B, Se, d)."""
+    x = frontend.astype(jnp.dtype(cfg.dtype))
+    Se = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(Se)[None], x.shape[:2])
+
+    def body(x, p):
+        x, _, _ = B.apply_layer(cfg, "enc", p, x, mode="train",
+                                positions=positions)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return apply_norm(cfg, params["encoder_norm"], x)
+
+
+# ------------------------------------------------------------------ forward
+def forward(cfg, params, tokens, *, frontend=None, mode: str = "train",
+            collect_states: bool = False):
+    """tokens (B,S) int32. Returns (logits, aux, states) where states is a
+    list of per-block hidden states (adaptive-depth exits) or None.
+
+    `frontend`: (B, N, d) stub embeddings — image patches (vlm), audio
+    frames (audio enc-dec input), or None.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    S = tokens.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], tokens.shape)
+    x = _embed_tokens(cfg, params, tokens, positions)
+    if cfg.is_encdec:
+        frontend = _run_encoder(cfg, params, frontend)
+
+    collect = collect_states or (cfg.adaptive.enabled and mode == "train")
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def block_body(carry, pblock):
+        x, aux = carry
+        for j, kind in enumerate(cfg.pattern):
+            x, _, aux = B.apply_layer(cfg, kind, pblock[j], x, mode="train",
+                                      positions=positions, frontend=frontend,
+                                      aux=aux)
+        ys = x if collect else jnp.zeros((), dtype)
+        return (x, aux), ys
+
+    body = block_body
+    if getattr(cfg, "_remat", True) and mode == "train":
+        body = jax.checkpoint(block_body, prevent_cse=False)
+
+    (x, aux), states = jax.lax.scan(body, (x, aux0), params["blocks"])
+    for p, kind in zip(params["rem"], cfg.remainder):
+        x, _, aux = B.apply_layer(cfg, kind, p, x, mode="train",
+                                  positions=positions, frontend=frontend,
+                                  aux=aux)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _project_logits(cfg, params, x)
+    return logits, aux, (states if collect else None)
+
+
+def _project_logits(cfg, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    if cfg.final_logit_softcap:
+        logits = jnp.tanh(logits / cfg.final_logit_softcap) * cfg.final_logit_softcap
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def exit_logits(cfg, params, state, exit_index: int):
+    """Exit head = per-exit adapter + rmsnorm + shared unembedding."""
+    e = params["exits"]
+    h = state @ e["adapter"][exit_index].astype(state.dtype)
+    hf = h.astype(jnp.float32)
+    hf = hf * jax.lax.rsqrt(jnp.mean(jnp.square(hf), -1, keepdims=True)
+                            + cfg.norm_eps)
+    h = (hf * e["norm_scale"][exit_index].astype(jnp.float32)).astype(state.dtype)
+    return _project_logits(cfg, params, h)
+
+
+# --------------------------------------------------------------------- loss
+def softmax_xent(logits, labels, mask=None):
+    """logits (B,S,V) any dtype; labels (B,S) int32; mask (B,S) optional."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def loss_fn(cfg, params, batch):
+    """Next-token prediction; batch = {'tokens', optional 'frontend'}."""
+    tokens = batch["tokens"]
+    logits, aux, states = forward(cfg, params, tokens,
+                                  frontend=batch.get("frontend"), mode="train")
+    labels = tokens[:, 1:]
+    lm = softmax_xent(logits[:, :-1], labels)
+    loss = lm + aux
+    metrics = {"lm_loss": lm, "aux_loss": aux}
+    if cfg.adaptive.enabled and states is not None and "exits" in params:
+        from repro.core.inception_distill import transformer_inception_loss
+        id_loss, id_metrics = transformer_inception_loss(
+            cfg, params, states, logits, labels)
+        loss = loss + id_loss
+        metrics.update(id_metrics)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def prefill_step(cfg, params, tokens, *, frontend=None):
+    """Process a full prompt; returns (last-position logits (B, V), caches).
+    This is the serving prefill: KV caches (or recurrent states) for every
+    layer are materialized as scan outputs."""
+    dtype = jnp.dtype(cfg.dtype)
+    S = tokens.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], tokens.shape)
+    x = _embed_tokens(cfg, params, tokens, positions)
+    if cfg.is_encdec:
+        frontend = _run_encoder(cfg, params, frontend)
+
+    def block_body(x, pblock):
+        caches = []
+        for j, kind in enumerate(cfg.pattern):
+            x, c, _ = B.apply_layer(cfg, kind, pblock[j], x, mode="prefill",
+                                    positions=positions, frontend=frontend)
+            caches.append(c)
+        return x, tuple(caches)
+
+    x, block_caches = jax.lax.scan(block_body, x, params["blocks"])
+    rem_caches = []
+    for p, kind in zip(params["rem"], cfg.remainder):
+        x, c, _ = B.apply_layer(cfg, kind, p, x, mode="prefill",
+                                positions=positions, frontend=frontend)
+        rem_caches.append(c)
+    x = apply_norm(cfg, params["final_norm"], x[:, -1:, :])
+    logits = _project_logits(cfg, params, x)[:, 0, :]
+    return logits, {"blocks": block_caches, "rem": tuple(rem_caches)}
+
+
+# ------------------------------------------------------------------- decode
+def _decode_len(cfg, shape_seq: int) -> int:
+    """KV length actually materialized for a decode shape. Full-attention
+    configs serving long contexts switch to the sliding-window variant."""
+    if shape_seq > 32_768 and cfg.supports_long_context == "window":
+        return cfg.long_context_window
+    return shape_seq
+
+
+def init_cache(cfg, batch: int, length: int):
+    dtype = jnp.dtype(cfg.dtype)
+    R = cfg.pattern_repeats
+
+    def stacked(kind):
+        one = B.init_layer_cache(cfg, kind, batch, length, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (R,) + a.shape).copy(), one)
+
+    cache = {
+        "blocks": tuple(stacked(kind) for kind in cfg.pattern),
+        "rem": tuple(B.init_layer_cache(cfg, kind, batch, length, dtype)
+                     for kind in cfg.remainder),
+    }
+    return cache
+
+
+def abstract_cache(cfg, batch: int, length: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, length))
+
+
+_CACHE_LOGICAL = {
+    "h": ("batch", "rnn"),
+    "conv": ("batch", None, "rnn"),
+    "state": ("batch", "heads", None, None),
+    "x_t": ("batch", "embed"),
+    "x_c": ("batch", "embed"),
+}
+
+_TP_AXIS = 16  # production model-axis size (launch/mesh.py)
+
+
+def _kv_cache_logical(cfg):
+    """KV cache TP dim. NEVER the sequence dim: a seq-sharded cache turns
+    the per-step dynamic-update-slice into a full cache all-gather
+    (measured 104 GB/chip/step on mistral decode_32k — §Perf-3 iter 1).
+    Prefer kv_heads; fall back to head_dim (partial-logits all-reduce is
+    tiny); else replicate over model."""
+    if cfg.num_kv_heads % _TP_AXIS == 0:
+        return ("batch", "cache_seq", "kv_heads", None)
+    if cfg.resolved_head_dim % _TP_AXIS == 0:
+        return ("batch", "cache_seq", None, "cache_hd")
+    return ("batch", "cache_seq", None, None)
+
+
+def cache_specs(cfg, batch: int, length: int):
+    ab = abstract_cache(cfg, batch, length)
+    kv_logical = _kv_cache_logical(cfg)
+
+    def to_spec(path, leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        logical = kv_logical if key in ("k", "v", "xk", "xv") \
+            else _CACHE_LOGICAL[key]
+        stacked = len(leaf.shape) == len(logical) + 1
+        names = (("layers",) + logical) if stacked else logical
+        return logical_spec(*names)
+
+    return jax.tree_util.tree_map_with_path(to_spec, ab)
+
+
+def seed_frontend_cache(cfg, params, cache, frontend):
+    """Fill the xk/xv entries of a fresh decode cache from frontend
+    embeddings (VLM) or the encoder output (enc-dec) — decode-from-scratch
+    serving without a full prefill."""
+    from repro.nn import attention as A
+    if cfg.is_encdec:
+        frontend = _run_encoder(cfg, params, frontend)
+    R = cfg.pattern_repeats
+    new_blocks = []
+    for j, kind in enumerate(cfg.pattern):
+        cb = cache["blocks"][j]
+        if kind in ("xattn", "encdec"):
+            ks, vs = [], []
+            for r in range(R):
+                pr = jax.tree.map(lambda a: a[r], params["blocks"][j])
+                k, v = A.project_kv(cfg, pr["xattn"], frontend)
+                ks.append(k)
+                vs.append(v)
+            cb = dict(cb, xk=jnp.stack(ks).astype(cb["xk"].dtype),
+                      xv=jnp.stack(vs).astype(cb["xv"].dtype))
+        new_blocks.append(cb)
+    new_rem = []
+    for p, c, kind in zip(params["rem"], cache["rem"], cfg.remainder):
+        if kind in ("xattn", "encdec"):
+            k, v = A.project_kv(cfg, p["xattn"], frontend)
+            c = dict(c, xk=k.astype(c["xk"].dtype),
+                     xv=v.astype(c["xv"].dtype))
+        new_rem.append(c)
+    return {"blocks": tuple(new_blocks), "rem": tuple(new_rem)}
+
+
+def decode_step(cfg, params, cache, tokens, pos, frontend=None):
+    """One decode step. tokens (B,1) int32; pos scalar int32 (absolute
+    position of the new token). Returns (logits (B,1,V), new cache)."""
+    positions = jnp.broadcast_to(pos[None, None], tokens.shape)
+    x = _embed_tokens(cfg, params, tokens, positions)
+
+    # Layer scan with the stacked cache as CARRY, updated by a
+    # dynamic-index DUS per iteration. Collecting new layer caches as scan
+    # ys re-materializes the whole stacked cache every iteration (measured
+    # 968 GB/chip/step on mistral decode_32k); unrolling makes full-buffer
+    # copies per layer instead (§Perf-3 iterations 5-6). A loop carry
+    # aliases in place.
+    def block_body(carry, xs):
+        x, cblocks, i = carry
+        pblock = xs
+        new_cblocks = []
+        for j, kind in enumerate(cfg.pattern):
+            cl_ = jax.tree.map(
+                lambda buf: jax.lax.dynamic_index_in_dim(buf, i, 0,
+                                                         keepdims=False),
+                cblocks[j])
+            x, c, _ = B.apply_layer(cfg, kind, pblock[j], x, mode="decode",
+                                    cache=cl_, pos=pos, frontend=frontend)
+            new_cblocks.append(jax.tree.map(
+                lambda buf, new: jax.lax.dynamic_update_index_in_dim(
+                    buf, new.astype(buf.dtype), i, 0),
+                cblocks[j], c))
+        return (x, tuple(new_cblocks), i + 1), None
+
+    (x, new_blocks, _), _ = jax.lax.scan(
+        block_body, (x, cache["blocks"], jnp.int32(0)), params["blocks"])
+    new_rem = []
+    for p, c, kind in zip(params["rem"], cache["rem"], cfg.remainder):
+        x, c2, _ = B.apply_layer(cfg, kind, p, x, mode="decode", cache=c,
+                                 pos=pos, frontend=frontend)
+        new_rem.append(c2)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _project_logits(cfg, params, x)
+    return logits, {"blocks": new_blocks, "rem": tuple(new_rem)}

@@ -1,0 +1,5 @@
+from repro.nn.params import (ParamDef, abstract_tree, count_params, init_tree,
+                             spec_tree, tree_bytes)
+
+__all__ = ["ParamDef", "abstract_tree", "count_params", "init_tree",
+           "spec_tree", "tree_bytes"]

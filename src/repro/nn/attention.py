@@ -1,0 +1,206 @@
+"""Self/cross attention with GQA/MQA, RoPE, sliding windows and KV caches.
+
+Shapes: x (B, S, d); q (B, S, H, hd); k/v (B, S, KV, hd).
+All attention math runs in f32 for stability; inputs/outputs keep model dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.basic import rotary
+from repro.nn.params import ParamDef
+from repro.sharding import constrain
+
+NEG_INF = -2.0e38
+
+
+def attn_defs(cfg, cross: bool = False):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    # When kv_heads don't divide the TP axis but q heads do (llama/mistral
+    # GQA kv=8), shard wk/wv on head_dim to match the q-head TP layout and
+    # the hd-sharded KV cache — the leftmost (contracting-d) fallback here
+    # measured 2x worse on llama-vision train_4k (§Perf follow-up).
+    kv_nd = cfg.num_kv_heads % 16 != 0
+    hd_tp = kv_nd and cfg.num_heads % 16 == 0 and hd % 16 == 0
+    # (kv_heads must be absent from the spec when cache_hd is used, or the
+    # logical builder's duplicate-axis guard nullifies the hd entry)
+    kv_logical = ("embed", None, "cache_hd") if hd_tp \
+        else ("embed", "kv_heads", "head_dim")
+    return {
+        "wq": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, KV, hd), kv_logical),
+        "wv": ParamDef((d, KV, hd), kv_logical),
+        "wo": ParamDef((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _soft_cap(logits, cap):
+    if cap and cap > 0.0:
+        return jnp.tanh(logits / cap) * cap
+    return logits
+
+
+def _sdpa(cfg, q, k, v, mask) -> jax.Array:
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd), mask broadcastable to (B,H,Sq,Sk)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    # QK dot reads q/k in their stored dtype (bf16) and accumulates f32:
+    # the cache IS bf16, so casting it to f32 first adds zero information
+    # but round-trips the entire cache through HBM every decode step
+    # (measured ~1 TB/chip on mistral decode_32k — §Perf-3 iteration 4).
+    qf = (q.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))).astype(q.dtype)
+    qf = qf.reshape(B, Sq, KV, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qf, k,
+                        preferred_element_type=jnp.float32)
+    vf = v
+    logits = _soft_cap(logits, cfg.attn_logit_softcap)
+    if mask is not None:
+        # additive mask: one fused add instead of broadcast+select passes
+        # over the S^2 buffer (§Perf-1 iteration 6)
+        bias = jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
+        logits = logits + bias[:, None, None, :, :]
+    w = jax.nn.softmax(logits, axis=-1)
+    # PV product reads the S^2 weights in bf16 (halves one full pass over
+    # the logits-sized tensor) but accumulates in f32; probabilities are
+    # O(1) so the bf16 quantization error is ~1e-3 relative — verified by
+    # the decode-vs-full and flash-kernel tests.
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), vf,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def causal_mask(Sq: int, Sk: int, window: int = 0, offset: int = 0):
+    """(1, Sq, Sk) causal (optionally banded) mask. `offset` = absolute
+    position of query 0 minus key 0 (for prefill continuation)."""
+    qpos = jnp.arange(Sq)[:, None] + offset
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window and window > 0:
+        m &= kpos > qpos - window
+    return m[None]
+
+
+# Sequences longer than this are processed in query chunks (flash-style at
+# the XLA level): no (S, S) buffer is ever materialized, the per-chunk
+# (B, H, Q_CHUNK, S) logits are the only transient. Exact numerics.
+CHUNK_THRESHOLD = 8192
+Q_CHUNK = 512
+
+
+def _seq_shard(cfg, x):
+    """Context-parallel constraint: shard the seq dim over 'model'. Only for
+    flagged configs (non-TP-divisible heads) and production-sized chunks."""
+    if cfg.seq_shard_attn and x.shape[1] >= 256 and x.shape[1] % 16 == 0:
+        return constrain(x, "batch", "qseq", None, None)
+    return x
+
+
+def _chunked_sdpa(cfg, q, k, v, *, window: int):
+    """Causal (optionally banded) attention via lax.scan over query chunks."""
+    B, S, H, hd = q.shape
+    nq = S // Q_CHUNK
+    qc = jnp.moveaxis(q.reshape(B, nq, Q_CHUNK, H, hd), 1, 0)
+
+    def body(_, inp):
+        i, qi = inp
+        qi = _seq_shard(cfg, qi)
+        offset = i * Q_CHUNK
+        qpos = offset + jnp.arange(Q_CHUNK)[:, None]
+        kpos = jnp.arange(S)[None, :]
+        m = kpos <= qpos
+        if window and window > 0:
+            m &= kpos > qpos - window
+        out = _sdpa(cfg, qi, k, v, m[None])
+        return None, _seq_shard(cfg, out)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qc))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+def self_attention(cfg, p, x, positions, *, window: int = 0,
+                   mask: Optional[jax.Array] = None):
+    """Full-sequence self attention (train / prefill). Returns (out, (k, v))."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"])
+    if cfg.use_rope:
+        q = rotary(q, positions, cfg.rope_theta)
+        k = rotary(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    S = x.shape[1]
+    if mask is None and S > CHUNK_THRESHOLD and S % Q_CHUNK == 0:
+        out = _chunked_sdpa(cfg, q, k, v, window=window)
+    else:
+        if mask is None:
+            mask = causal_mask(S, S, window)
+        out = _sdpa(cfg, _seq_shard(cfg, q), k, v, mask)
+        out = _seq_shard(cfg, out)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    return constrain(out, "batch", "seq", "embed"), (k, v)
+
+
+def cross_attention(cfg, p, x, kv_cache):
+    """x (B,Sq,d) attends to precomputed (k, v) from the frontend/encoder."""
+    k, v = kv_cache
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])   # no RoPE on cross-attn
+    out = _sdpa(cfg, q, k, v, mask=None)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    return constrain(out, "batch", "seq", "embed")
+
+
+def project_kv(cfg, p, y):
+    """Project frontend/encoder output y (B,Se,d) to (k, v) for cross-attn."""
+    k = jnp.einsum("bsd,dke->bske", y, p["wk"])
+    v = jnp.einsum("bsd,dke->bske", y, p["wv"])
+    return k, v
+
+
+# ----------------------------------------------------------------- decoding
+def init_kv_cache(cfg, batch: int, length: int, dtype) -> dict:
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    z = jnp.zeros((batch, length, KV, hd), dtype)
+    return {"k": z, "v": z}
+
+
+def decode_self_attention(cfg, p, x, cache, pos, *, window: int = 0):
+    """One-token decode. x (B,1,d); cache {'k','v'} (B,L,KV,hd); pos scalar
+    int32 = index of the new token. For windowed layers the cache is a ring
+    buffer of length `window`."""
+    B = x.shape[0]
+    L = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"])
+    if cfg.use_rope:
+        q = rotary(q, positions, cfg.rope_theta)
+        k = rotary(k, positions, cfg.rope_theta)
+    if cfg.num_kv_heads % 16 != 0 and cfg.resolved_head_dim % 16 == 0:
+        # match the hd-sharded KV cache layout (§Perf-3): with q sharded the
+        # same way the logits dot becomes partial-sum + a small all-reduce;
+        # otherwise GSPMD "involuntarily rematerializes" (= all-gathers) the
+        # whole cache every step (measured 94 GB/chip on mistral decode_32k)
+        q = constrain(q, "batch", "rep", "rep", "cache_hd")
+        k = constrain(k, "batch", "rep", "rep", "cache_hd")
+        v = constrain(v, "batch", "rep", "rep", "cache_hd")
+    slot = jnp.where(window > 0, pos % jnp.int32(max(window, 1)), pos)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+    kpos = jnp.arange(L)[None, :]
+    if window > 0:
+        # ring buffer: every slot written so far is within the window by
+        # construction; RoPE was applied at absolute positions already.
+        valid = kpos <= jnp.minimum(pos, L - 1)
+    else:
+        valid = kpos <= pos
+    mask = jnp.broadcast_to(valid[None, :, :], (B, 1, L))
+    out = _sdpa(cfg, q, ck, cv, mask)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    out = constrain(out, "batch", "seq", "embed")
+    return out, {"k": ck, "v": cv}

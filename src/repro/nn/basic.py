@@ -1,0 +1,68 @@
+"""Norms, rotary embeddings, dense MLPs — shared primitives."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.params import ParamDef
+from repro.sharding import constrain
+
+
+# --------------------------------------------------------------------- norms
+def norm_defs(cfg, dim=None):
+    d = dim or cfg.d_model
+    if cfg.norm_kind == "layernorm":
+        return {"scale": ParamDef((d,), ("embed",), "ones"),
+                "bias": ParamDef((d,), ("embed",), "zeros")}
+    # rmsnorm applies (1 + scale) gemma-style -> zero init = unit gain
+    return {"scale": ParamDef((d,), ("embed",), "zeros")}
+
+
+def apply_norm(cfg, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * (1.0 + p["scale"].astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- rotary
+def rotary(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq          # (..., S, half)
+    ang = ang[..., None, :]                                        # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- dense MLP
+def mlp_defs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {"w_gate": ParamDef((d, f), ("embed", "mlp")),
+                "w_up": ParamDef((d, f), ("embed", "mlp")),
+                "w_down": ParamDef((f, d), ("mlp", "embed"))}
+    return {"w_up": ParamDef((d, f), ("embed", "mlp")),
+            "w_down": ParamDef((f, d), ("mlp", "embed"))}
+
+
+def apply_mlp(cfg, p, x):
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.mlp_kind == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    h = constrain(h, "batch", "seq", "mlp")
+    return h @ p["w_down"]

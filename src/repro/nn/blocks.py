@@ -1,0 +1,203 @@
+"""Per-kind transformer blocks. One `layer_defs`/`apply_layer` pair covers
+every layer kind in `repro.common.LAYER_KINDS`; the model trunk scans these.
+
+apply_layer contract:
+    x, cache, aux = apply_layer(cfg, kind, p, x, mode=...,
+                                positions=..., cache=..., frontend=...,
+                                pos=..., aux=...)
+  mode     : 'train' | 'prefill' | 'decode'
+  cache    : kind-specific pytree (see init_layer_cache) or None for 'train'
+  frontend : stub embeddings (images / encoder output) for xattn/encdec
+  pos      : scalar decode position
+  aux      : accumulated auxiliary loss (MoE load balance)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn
+from repro.nn import rglru as rg
+from repro.nn import rwkv as rk
+from repro.nn.basic import apply_mlp, apply_norm, mlp_defs, norm_defs
+from repro.nn.moe import apply_moe, apply_moe_decode, moe_defs
+from repro.nn.params import ParamDef
+
+
+# --------------------------------------------------------------------- defs
+def layer_defs(cfg, kind: str):
+    if kind in ("attn", "local", "enc"):
+        return {"norm1": norm_defs(cfg), "attn": attn.attn_defs(cfg),
+                "norm2": norm_defs(cfg), "mlp": mlp_defs(cfg)}
+    if kind == "attn_moe":
+        return {"norm1": norm_defs(cfg), "attn": attn.attn_defs(cfg),
+                "norm2": norm_defs(cfg), "moe": moe_defs(cfg)}
+    if kind == "rglru":
+        return {"norm1": norm_defs(cfg), "rglru": rg.rglru_defs(cfg),
+                "norm2": norm_defs(cfg), "mlp": mlp_defs(cfg)}
+    if kind == "rwkv":
+        return {"norm1": norm_defs(cfg), "norm2": norm_defs(cfg),
+                **rk.rwkv_defs(cfg)}
+    if kind == "xattn":
+        return {"norm1": norm_defs(cfg), "xattn": attn.attn_defs(cfg, cross=True),
+                "gate_attn": ParamDef((), (), "zeros"),
+                "norm2": norm_defs(cfg), "mlp": mlp_defs(cfg),
+                "gate_mlp": ParamDef((), (), "zeros")}
+    if kind == "encdec":
+        return {"norm1": norm_defs(cfg), "attn": attn.attn_defs(cfg),
+                "normx": norm_defs(cfg), "xattn": attn.attn_defs(cfg, cross=True),
+                "norm2": norm_defs(cfg), "mlp": mlp_defs(cfg)}
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+# -------------------------------------------------------------------- cache
+def init_layer_cache(cfg, kind: str, batch: int, length: int, dtype):
+    """`length` = max decode length (KV cache size). Windowed layers use a
+    ring buffer of `min(window, length)`."""
+    if kind in ("attn", "attn_moe", "encdec"):
+        c = attn.init_kv_cache(cfg, batch, length, dtype)
+    elif kind == "local":
+        w = min(cfg.sliding_window or length, length)
+        c = attn.init_kv_cache(cfg, batch, w, dtype)
+    elif kind == "rglru":
+        return rg.init_rglru_cache(cfg, batch, dtype)
+    elif kind == "rwkv":
+        return rk.init_rwkv_cache(cfg, batch, dtype)
+    elif kind == "xattn":
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        n = cfg.num_image_tokens
+        z = jnp.zeros((batch, n, KV, hd), dtype)
+        return {"xk": z, "xv": z}
+    else:
+        raise ValueError(kind)
+    if kind == "encdec":
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        z = jnp.zeros((batch, cfg.encoder_seq, KV, hd), dtype)
+        c = dict(c, xk=z, xv=z)
+    return c
+
+
+# -------------------------------------------------------------------- apply
+def apply_layer(cfg, kind: str, p, x, *, mode: str = "train",
+                positions=None, cache=None, frontend=None, pos=None, aux=0.0):
+    if mode == "decode":
+        return _decode_layer(cfg, kind, p, x, cache, frontend, pos, aux)
+    return _full_layer(cfg, kind, p, x, positions, frontend, mode, aux)
+
+
+def _full_layer(cfg, kind, p, x, positions, frontend, mode, aux):
+    new_cache = None
+    if kind == "rwkv":
+        B = x.shape[0]
+        H, hd = rk._heads(cfg)
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+        h, state = rk.rwkv_time_mix_full(cfg, p["tmix"], apply_norm(cfg, p["norm1"], x), state)
+        x = x + h
+        xn = apply_norm(cfg, p["norm2"], x)
+        x = x + rk.rwkv_channel_mix_full(cfg, p["cmix"], xn)
+        if mode == "prefill":
+            new_cache = {"state": state,
+                         "x_t": x[:, -1, :] * 0,  # overwritten below
+                         "x_c": xn[:, -1, :]}
+            # tmix shift state = last *normed* input token to tmix
+            new_cache["x_t"] = apply_norm(cfg, p["norm1"], x)[:, -1, :]
+        return x, new_cache, aux
+
+    if kind == "rglru":
+        h, h_last, conv_tail = rg.rglru_full(cfg, p["rglru"],
+                                             apply_norm(cfg, p["norm1"], x))
+        x = x + h
+        x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x))
+        if mode == "prefill":
+            new_cache = {"h": h_last, "conv": conv_tail}
+        return x, new_cache, aux
+
+    if kind == "xattn":
+        xk, xv = attn.project_kv(cfg, p["xattn"], frontend)
+        h = attn.cross_attention(cfg, p["xattn"], apply_norm(cfg, p["norm1"], x),
+                                 (xk, xv))
+        x = x + jnp.tanh(p["gate_attn"]) * h
+        h = apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x))
+        x = x + jnp.tanh(p["gate_mlp"]) * h
+        if mode == "prefill":
+            new_cache = {"xk": xk, "xv": xv}
+        return x, new_cache, aux
+
+    # attention-style kinds
+    window = cfg.sliding_window if kind == "local" else 0
+    mask = None
+    if kind == "enc":
+        S = x.shape[1]
+        mask = jnp.ones((1, S, S), bool)
+    h, (k, v) = attn.self_attention(cfg, p["attn"],
+                                    apply_norm(cfg, p["norm1"], x),
+                                    positions, window=window, mask=mask)
+    x = x + h
+    if kind == "encdec":
+        xk, xv = attn.project_kv(cfg, p["xattn"], frontend)
+        h = attn.cross_attention(cfg, p["xattn"],
+                                 apply_norm(cfg, p["normx"], x), (xk, xv))
+        x = x + h
+    xn = apply_norm(cfg, p["norm2"], x)
+    if kind == "attn_moe":
+        h, moe_aux = apply_moe(cfg, p["moe"], xn)
+        aux = aux + moe_aux
+    else:
+        h = apply_mlp(cfg, p["mlp"], xn)
+    x = x + h
+    if mode == "prefill" and kind != "enc":
+        new_cache = {"k": k, "v": v}
+        if kind == "local":
+            w = min(cfg.sliding_window, k.shape[1])
+            new_cache = {"k": k[:, -w:], "v": v[:, -w:]}
+        if kind == "encdec":
+            new_cache = dict(new_cache, xk=xk, xv=xv)
+    return x, new_cache, aux
+
+
+def _decode_layer(cfg, kind, p, x, cache, frontend, pos, aux):
+    if kind == "rwkv":
+        xn = apply_norm(cfg, p["norm1"], x)
+        h, state = rk.rwkv_tmix_decode(cfg, p["tmix"], xn, cache["state"],
+                                       cache["x_t"])
+        x = x + h
+        xc = apply_norm(cfg, p["norm2"], x)
+        x = x + rk.rwkv_cmix_decode(cfg, p["cmix"], xc, cache["x_c"])
+        return x, {"state": state, "x_t": xn[:, 0, :], "x_c": xc[:, 0, :]}, aux
+
+    if kind == "rglru":
+        h, new_cache = rg.rglru_decode(cfg, p["rglru"],
+                                       apply_norm(cfg, p["norm1"], x), cache)
+        x = x + h
+        x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x))
+        return x, new_cache, aux
+
+    if kind == "xattn":
+        h = attn.cross_attention(cfg, p["xattn"], apply_norm(cfg, p["norm1"], x),
+                                 (cache["xk"], cache["xv"]))
+        x = x + jnp.tanh(p["gate_attn"]) * h
+        h = apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x))
+        x = x + jnp.tanh(p["gate_mlp"]) * h
+        return x, cache, aux
+
+    window = cfg.sliding_window if kind == "local" else 0
+    h, kv = attn.decode_self_attention(cfg, p["attn"],
+                                       apply_norm(cfg, p["norm1"], x),
+                                       {"k": cache["k"], "v": cache["v"]},
+                                       pos, window=window)
+    x = x + h
+    new_cache = dict(cache, k=kv["k"], v=kv["v"])
+    if kind == "encdec":
+        h = attn.cross_attention(cfg, p["xattn"], apply_norm(cfg, p["normx"], x),
+                                 (cache["xk"], cache["xv"]))
+        x = x + h
+    xn = apply_norm(cfg, p["norm2"], x)
+    if kind == "attn_moe":
+        h, moe_aux = apply_moe_decode(cfg, p["moe"], xn)
+        aux = aux + moe_aux
+    else:
+        h = apply_mlp(cfg, p["mlp"], xn)
+    x = x + h
+    return x, new_cache, aux

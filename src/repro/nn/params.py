@@ -1,0 +1,91 @@
+"""Parameter definition trees.
+
+A model declares its parameters ONCE as a pytree of `ParamDef`s (shape +
+logical axes + initializer). Everything else is derived from that single
+source of truth:
+
+  * `init_tree(key, defs, dtype)`      -> pytree of initialized jnp arrays
+  * `spec_tree(defs)`                  -> matching pytree of PartitionSpec
+  * `abstract_tree(defs, dtype)`       -> pytree of ShapeDtypeStruct (dry-run)
+
+This is the pure-JAX replacement for a module system: params stay ordinary
+pytrees, `apply` functions stay ordinary functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import spec as logical_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "fan_in"          # fan_in | normal | zeros | ones | embed | small
+    scale: float = 1.0
+    dtype: Optional[str] = None   # override model param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_one(key: jax.Array, d: ParamDef, default_dtype) -> jax.Array:
+    dtype = jnp.dtype(d.dtype or default_dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "normal":
+        return (jax.random.normal(key, d.shape, jnp.float32) * d.scale).astype(dtype)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape, jnp.float32)
+                * (d.scale / math.sqrt(d.shape[-1]))).astype(dtype)
+    if d.init == "small":
+        return (jax.random.normal(key, d.shape, jnp.float32) * 0.02 * d.scale
+                ).astype(dtype)
+    if d.init == "fan_in":
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def init_tree(key: jax.Array, defs, dtype="float32"):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_one(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def spec_tree(defs):
+    return jax.tree.map(lambda d: logical_spec(*d.logical), defs, is_leaf=_is_def)
+
+
+def abstract_tree(defs, dtype="float32"):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or dtype)),
+        defs, is_leaf=_is_def)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=_is_def)
+    total = 0
+    for leaf in leaves:
+        shape = leaf.shape if hasattr(leaf, "shape") else ()
+        total += int(np.prod(shape)) if shape else 1
+    return total
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

@@ -1,0 +1,90 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block = [linear in (x, gate branches)] -> causal depthwise conv1d -> RG-LRU
+-> gated output projection. Full-sequence mode uses an associative scan
+(O(log T) depth — the TPU-native mapping of the sequential GPU kernel);
+decode mode is a single state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.params import ParamDef
+from repro.sharding import constrain
+
+_C = 8.0  # Griffin's fixed scaling constant in a_t = exp(-c * softplus(Λ) * r_t)
+
+
+def rglru_defs(cfg):
+    d, w = cfg.d_model, cfg.resolved_rnn_width
+    return {
+        "w_x": ParamDef((d, w), ("embed", "rnn")),
+        "w_gate": ParamDef((d, w), ("embed", "rnn")),
+        "conv_w": ParamDef((cfg.conv1d_width, w), (None, "rnn"), "small"),
+        "conv_b": ParamDef((w,), ("rnn",), "zeros"),
+        "w_a": ParamDef((w, w), ("rnn", None), "small"),
+        "w_i": ParamDef((w, w), ("rnn", None), "small"),
+        "lam": ParamDef((w,), ("rnn",), "normal", 0.5),
+        "w_out": ParamDef((w, d), ("rnn", "embed")),
+    }
+
+
+def _conv1d_full(p, x):
+    """Causal depthwise conv; x (B,T,w)."""
+    K = p["conv_w"].shape[0]
+    pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + x.shape[1], :] * p["conv_w"][i] for i in range(K))
+    return out + p["conv_b"]
+
+
+def _gates(p, xc):
+    rf = jax.nn.sigmoid(xc.astype(jnp.float32) @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xc.astype(jnp.float32) @ p["w_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * rf
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * i * xc.astype(jnp.float32)
+    return a, b
+
+
+def rglru_full(cfg, p, x):
+    """x (B,T,d) -> (y (B,T,d), h_last (B,w), conv_tail (B,K-1,w))."""
+    gate = jax.nn.gelu((x @ p["w_gate"]), approximate=True)
+    xb = x @ p["w_x"]
+    xc = _conv1d_full(p, xb)
+    a, b = _gates(p, xc)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = hh.astype(x.dtype)
+    h = constrain(h, "batch", None, None)
+    y = (h * gate) @ p["w_out"]
+    K = p["conv_w"].shape[0]
+    conv_tail = xb[:, -(K - 1):, :] if K > 1 else jnp.zeros(
+        (x.shape[0], 0, xb.shape[-1]), xb.dtype)
+    return constrain(y, "batch", "seq", "embed"), hh[:, -1, :], conv_tail
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> dict:
+    w, K = cfg.resolved_rnn_width, cfg.conv1d_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, K - 1, w), dtype)}
+
+
+def rglru_decode(cfg, p, x, cache):
+    """x (B,1,d), cache {'h' (B,w) f32, 'conv' (B,K-1,w)} -> (y, cache)."""
+    gate = jax.nn.gelu((x @ p["w_gate"]), approximate=True)
+    xb = x @ p["w_x"]                                   # (B,1,w)
+    K = p["conv_w"].shape[0]
+    hist = jnp.concatenate([cache["conv"], xb.astype(cache["conv"].dtype)],
+                           axis=1)                      # (B,K,w)
+    xc = jnp.einsum("bkw,kw->bw", hist, p["conv_w"]) + p["conv_b"]
+    a, b = _gates(p, xc)                                # (B,w) f32
+    h = a * cache["h"] + b
+    y = ((h.astype(x.dtype) * gate[:, 0, :]) @ p["w_out"])[:, None, :]
+    return y, {"h": h, "conv": hist[:, 1:, :]}

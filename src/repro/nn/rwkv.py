@@ -1,0 +1,199 @@
+"""RWKV-6 "Finch" layer (arXiv:2404.05892): time-mix with data-dependent
+per-channel decay + channel-mix.
+
+TPU adaptation: the sequential WKV recurrence is computed in CHUNKS — a
+quadratic intra-chunk part (MXU-friendly matmuls) plus an inter-chunk linear
+state carry via `lax.scan`. This is the standard linear-attention chunking;
+the GPU reference kernel is a per-timestep CUDA loop with no TPU analogue.
+Note: the ddlerp token-shift LoRA of full RWKV-6 is simplified to static
+interpolation weights (documented in DESIGN.md); the data-dependent decay
+(the architectural core of Finch) IS implemented.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.params import ParamDef
+from repro.sharding import constrain
+
+CHUNK = 16
+LORA_R = 32
+# Per-step log-decay is clamped to >= MIN_LOGW so the intra-chunk
+# factorization exp(Lc_t)·exp(-Lc_s) stays inside f32 range:
+# |CHUNK * MIN_LOGW| = 80 < log(f32_max) ~ 88. A channel at the clamp
+# forgets to 6.7e-3 in one step — numerically indistinguishable from the
+# unclamped recurrence (documented TPU adaptation).
+MIN_LOGW = -5.0
+
+
+def _heads(cfg):
+    hd = cfg.rwkv_head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def rwkv_defs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    H, hd = _heads(cfg)
+    D = H * hd
+    mix = {f"mu_{n}": ParamDef((d,), ("embed",), "zeros") for n in
+           ("r", "k", "v", "g", "w")}
+    tmix = dict(
+        mix,
+        w_r=ParamDef((d, D), ("embed", "rnn")),
+        w_k=ParamDef((d, D), ("embed", "rnn")),
+        w_v=ParamDef((d, D), ("embed", "rnn")),
+        w_g=ParamDef((d, D), ("embed", "rnn")),
+        w0=ParamDef((D,), ("rnn",), "normal", 0.5),
+        w_lora_a=ParamDef((d, LORA_R), ("embed", None), "small"),
+        w_lora_b=ParamDef((LORA_R, D), (None, "rnn"), "small"),
+        u=ParamDef((D,), ("rnn",), "small"),
+        ln_scale=ParamDef((D,), ("rnn",), "ones"),
+        w_o=ParamDef((D, d), ("rnn", "embed")),
+    )
+    cmix = dict(
+        mu_ck=ParamDef((d,), ("embed",), "zeros"),
+        mu_cr=ParamDef((d,), ("embed",), "zeros"),
+        w_ck=ParamDef((d, f), ("embed", "mlp")),
+        w_cv=ParamDef((f, d), ("mlp", "embed")),
+        w_cr=ParamDef((d, d), ("embed", "embed")),
+    )
+    return {"tmix": tmix, "cmix": cmix}
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def _shift(x):
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+
+
+def _decay(p, xw):
+    """log-decay (negative) per channel: w = exp(-exp(w0 + lora(x)))."""
+    lora = (xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    logw = -jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+    return jnp.maximum(logw, MIN_LOGW)
+
+
+def _group_norm(p, x, H, hd, eps=1e-5):
+    B, T, D = x.shape
+    xg = x.reshape(B, T, H, hd).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = jnp.square(xg - mu).mean(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(B, T, D) * p["ln_scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def _wkv_chunked(r, k, v, logw, u, state):
+    """r/k/v (B,T,H,hd) f32; logw (B,T,H,hd) f32 (<=0); u (H,hd);
+    state (B,H,hd,hd). Returns (out (B,T,H,hd), new state)."""
+    B, T, H, hd = r.shape
+    assert T % CHUNK == 0
+    n = T // CHUNK
+    rc = r.reshape(B, n, CHUNK, H, hd)
+    kc = k.reshape(B, n, CHUNK, H, hd)
+    vc = v.reshape(B, n, CHUNK, H, hd)
+    wc = logw.reshape(B, n, CHUNK, H, hd)
+
+    tri = jnp.tril(jnp.ones((CHUNK, CHUNK), jnp.float32), k=-1)
+
+    def chunk_step(S, inp):
+        # NOTE: pinning the state's sharding here was tried and is a no-op
+        # (GSPMD re-derives the same flip-flop; the per-chunk state
+        # all-gather is a 40-head/16-axis mismatch — §Perf follow-up)
+        rr, kk, vv, lw = inp                      # (B,C,H,hd)
+        Lc = jnp.cumsum(lw, axis=1)               # inclusive log cumprod
+        P = jnp.exp(Lc - lw)                      # prod_{s<t} w_s
+        Dv = jnp.exp(Lc)                          # prod_{s<=t} w_s
+        rp = rr * P
+        kd = kk * jnp.exp(-Lc)                    # k_s / D_s
+        A = jnp.einsum("bthc,bshc->bhts", rp, kd) * tri[None, None]
+        diag = jnp.einsum("bthc,bthc->bth", rr * u[None, None], kk)
+        out = jnp.einsum("bhts,bshc->bthc", A, vv) \
+            + diag[..., None] * vv \
+            + jnp.einsum("bthc,bhcd->bthd", rp, S)
+        Dtot = jnp.exp(Lc[:, -1])                 # (B,H,hd)
+        kscale = kk * jnp.exp(Lc[:, -1][:, None] - Lc)   # prod_{s<tau<=C} w
+        S_new = S * Dtot[..., None] + jnp.einsum("bshc,bshd->bhcd", kscale, vv)
+        return S_new, out
+
+    inp = tuple(a.transpose(1, 0, 2, 3, 4) for a in (rc, kc, vc, wc))
+    state, outs = jax.lax.scan(chunk_step, state, inp)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, hd), state
+
+
+def _tmix_project(cfg, p, x, x_prev):
+    r = _lerp(x, x_prev, p["mu_r"]) @ p["w_r"]
+    k = _lerp(x, x_prev, p["mu_k"]) @ p["w_k"]
+    v = _lerp(x, x_prev, p["mu_v"]) @ p["w_v"]
+    g = _lerp(x, x_prev, p["mu_g"]) @ p["w_g"]
+    logw = _decay(p, _lerp(x, x_prev, p["mu_w"]))
+    return r, k, v, g, logw
+
+
+def rwkv_time_mix_full(cfg, p, x, state):
+    """x (B,T,d); state (B,H,hd,hd) f32. Returns (y, state)."""
+    B, T, d = x.shape
+    H, hd = _heads(cfg)
+    pad = (-T) % CHUNK
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    r, k, v, g, logw = _tmix_project(cfg, p, xp, _shift(xp))
+    shp = (B, T + pad, H, hd)
+    rf, kf, vf = (a.astype(jnp.float32).reshape(shp) for a in (r, k, v))
+    lw = logw.reshape(shp)
+    if pad:  # padded steps: w=1 (logw=0), k=0 -> state untouched
+        mask = (jnp.arange(T + pad) < T)[None, :, None, None]
+        kf = kf * mask
+        lw = lw * mask
+    out, state = _wkv_chunked(rf, kf, vf, lw, p["u"].astype(jnp.float32)
+                              .reshape(H, hd), state)
+    out = out[:, :T].reshape(B, T, H * hd).astype(x.dtype)
+    out = _group_norm(p, out, H, hd) * jax.nn.silu(g[:, :T])
+    out = constrain(out, "batch", None, None)
+    return out @ p["w_o"], state
+
+
+def rwkv_channel_mix_full(cfg, p, x):
+    kx = _lerp(x, _shift(x), p["mu_ck"]) @ p["w_ck"]
+    kx = jnp.square(jax.nn.relu(kx))
+    kx = constrain(kx, "batch", None, None)
+    rx = jax.nn.sigmoid(_lerp(x, _shift(x), p["mu_cr"]) @ p["w_cr"])
+    return rx * (kx @ p["w_cv"])
+
+
+def init_rwkv_cache(cfg, batch: int, dtype) -> dict:
+    H, hd = _heads(cfg)
+    return {
+        "state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_t": jnp.zeros((batch, cfg.d_model), dtype),   # tmix shift state
+        "x_c": jnp.zeros((batch, cfg.d_model), dtype),   # cmix shift state
+    }
+
+
+def rwkv_tmix_decode(cfg, p, x, state, x_prev):
+    """One token time-mix. x (B,1,d); state (B,H,hd,hd) f32; x_prev (B,d).
+    Returns (y (B,1,d), new_state)."""
+    B = x.shape[0]
+    H, hd = _heads(cfg)
+    r, k, v, g, logw = _tmix_project(cfg, p, x, x_prev[:, None, :])
+    rf = r.astype(jnp.float32).reshape(B, H, hd)
+    kf = k.astype(jnp.float32).reshape(B, H, hd)
+    vf = v.astype(jnp.float32).reshape(B, H, hd)
+    w = jnp.exp(logw.reshape(B, H, hd))
+    u = p["u"].astype(jnp.float32).reshape(H, hd)
+    kv = jnp.einsum("bhc,bhd->bhcd", kf, vf)
+    out = jnp.einsum("bhc,bhcd->bhd", rf, state + u[..., None] * kv)
+    state = state * w[..., None] + kv
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    out = _group_norm(p, out, H, hd) * jax.nn.silu(g)
+    return out @ p["w_o"], state
+
+
+def rwkv_cmix_decode(cfg, p, x, x_prev):
+    """One token channel-mix. x (B,1,d); x_prev (B,d)."""
+    xp = x_prev[:, None, :]
+    kx = jnp.square(jax.nn.relu(_lerp(x, xp, p["mu_ck"]) @ p["w_ck"]))
+    rx = jax.nn.sigmoid(_lerp(x, xp, p["mu_cr"]) @ p["w_cr"])
+    return rx * (kx @ p["w_cv"])

@@ -1,0 +1,4 @@
+from repro.optim.adamw import adamw_init, adamw_update, global_norm
+from repro.optim.schedule import make_schedule
+
+__all__ = ["adamw_init", "adamw_update", "global_norm", "make_schedule"]

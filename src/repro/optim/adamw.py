@@ -1,0 +1,57 @@
+"""AdamW with global-norm clipping — pure JAX (optax is not available in the
+offline container; this is the framework's own optimizer substrate)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import TrainConfig
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_init(params, tc: TrainConfig):
+    mdt = jnp.dtype(tc.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, tc: TrainConfig, lr):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, tc.grad_clip / (gn + 1e-9)) if tc.grad_clip else 1.0
+
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - tc.beta1 ** c
+    bc2 = 1.0 - tc.beta2 ** c
+    mdt = jnp.dtype(tc.moment_dtype)
+
+    def upd(p, g, mu, nu):
+        gf = g.astype(jnp.float32) * scale
+        mu2 = tc.beta1 * mu.astype(jnp.float32) + (1 - tc.beta1) * gf
+        nu2 = tc.beta2 * nu.astype(jnp.float32) + (1 - tc.beta2) * jnp.square(gf)
+        step = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + tc.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step + tc.weight_decay * pf)
+        return pf.astype(p.dtype), mu2.astype(mdt), nu2.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}, metrics

@@ -1,0 +1,23 @@
+"""LR schedules (cosine / linear / constant with linear warmup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.common import TrainConfig
+
+
+def make_schedule(tc: TrainConfig):
+    def schedule(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(tc.warmup_steps, 1), 1.0)
+        frac = jnp.clip((s - tc.warmup_steps)
+                        / jnp.maximum(tc.total_steps - tc.warmup_steps, 1),
+                        0.0, 1.0)
+        if tc.schedule == "cosine":
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        elif tc.schedule == "linear":
+            decay = 1.0 - frac
+        else:
+            decay = 1.0
+        return tc.learning_rate * warm * decay
+    return schedule

@@ -1,0 +1,4 @@
+from repro.serving.engine import EngineStats, NAIServingEngine, Request
+from repro.serving.lm_engine import LMRequest, LMServingEngine
+
+__all__ = ["EngineStats", "NAIServingEngine", "Request", "LMRequest", "LMServingEngine"]

@@ -1,0 +1,3 @@
+from repro.sharding.logical import DEFAULT_RULES, constrain, named, resolve, spec
+
+__all__ = ["DEFAULT_RULES", "constrain", "named", "resolve", "spec"]

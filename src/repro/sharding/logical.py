@@ -1,0 +1,181 @@
+"""Logical axis system.
+
+Every parameter / activation dimension gets a *logical* name; a rules table
+maps logical names onto mesh axes. Meshes with or without a 'pod' axis reuse
+the same rules — missing mesh axes are silently dropped, so a config lowers
+unchanged on (16,16) and (2,16,16).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name -> preferred mesh axes (in order). A logical name mapping to a
+# multi-axis tuple shards that dim over the product of those axes.
+DEFAULT_RULES: dict[str, Tuple[str, ...]] = {
+    "batch":    ("pod", "data"),
+    "seq":      (),               # no sequence parallelism in v1 (see §Perf)
+    "embed":    (),
+    "vocab":    ("model",),
+    "mlp":      ("model",),
+    "heads":    ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "fsdp":     ("data",),        # parameter sharding over the data axis
+    "expert":   (),               # experts replicated (E over 'data' was
+                                  # tried and REFUTED: GSPMD lowers the
+                                  # dispatch reshard as gather chains, not
+                                  # all-to-all — §Perf-2 iteration 5)
+    # stacked-scan leading dim: __frozen__ is a sentinel consumed by
+    # fit_spec — the dim must NEVER be sharded (nor host fallback axes):
+    # scan slices it with the loop index, and a sharded dynamic-slice
+    # triggers SPMD "involuntary full rematerialization" (= gathering the
+    # whole stacked buffer; measured 5.4 GB/step on rwkv6 decode).
+    "layers":   ("__frozen__",),
+    "rnn":      ("model",),
+    "cache_seq": (),
+    "qseq":     ("model",),   # context-parallel attention (§Perf-1)
+    "rep":      (),           # EXPLICIT replication in constrain() (§Perf-2)
+    "embed_tp": ("model",),   # d_model sharded over TP post-downproj (§Perf-2)
+    "cache_hd": ("model",),   # KV-cache head_dim TP when kv_heads don't divide (§Perf-3)
+    "exit":     (),
+    # GNN side
+    "nodes":    ("pod", "data"),
+    "feature":  ("model",),
+    "classes":  (),
+}
+
+
+def spec(*logical: Optional[str], mesh: Optional[Mesh] = None,
+         rules: Optional[dict] = None) -> P:
+    """Build a PartitionSpec from logical dim names. `None` -> replicated."""
+    rules = rules or DEFAULT_RULES
+    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    out = []
+    used: set[str] = set()
+    for name in logical:
+        if name is None:
+            out.append(None)
+            continue
+        axes = tuple(a for a in rules.get(name, ())
+                     if (mesh_axes is None or a in mesh_axes) and a not in used)
+        used.update(axes)
+        if len(axes) == 0:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(axes)
+    return P(*out)
+
+
+def resolve(spec_: P, mesh: Mesh) -> P:
+    """Drop mesh axes a spec references that `mesh` does not have
+    (including the __frozen__ sentinel)."""
+    names = set(mesh.axis_names)
+    out = []
+    for entry in spec_:
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a in names)
+            out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        else:
+            out.append(entry if entry in names else None)
+    return P(*out)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= sizes[a]
+        return out
+    return sizes[axis]
+
+
+def fit_spec(spec_: P, shape: Sequence[int], mesh: Mesh,
+             fallback: bool = True) -> P:
+    """Make a spec legal for `shape` on `mesh`: axes whose size does not
+    divide their dim are dropped, then re-placed (rightmost-first) on any
+    unsharded dim they do divide — e.g. whisper's 12 heads can't take the
+    16-way model axis, so it moves to head_dim/embed. Keeps every mesh axis
+    in use whenever some dim can host it."""
+    frozen_dims = {i for i, e in enumerate(spec_)
+                   if e == "__frozen__" or (isinstance(e, tuple)
+                                            and "__frozen__" in e)}
+    spec_ = P(*[None if i in frozen_dims else e
+                for i, e in enumerate(spec_)])
+    spec_ = resolve(spec_, mesh)
+    entries = list(spec_) + [None] * (len(shape) - len(spec_))
+    dropped = []
+    for i, (e, d) in enumerate(zip(entries, shape)):
+        if e is None:
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        kept = []
+        for a in axes:
+            cur = 1
+            for k in kept:
+                cur *= _axis_size(mesh, k)
+            if d % (cur * _axis_size(mesh, a)) == 0:
+                kept.append(a)
+            else:
+                dropped.append(a)
+        entries[i] = tuple(kept) if len(kept) > 1 else (kept[0] if kept else None)
+    for a in (dropped if fallback else []):
+        # leftmost-first: for weight matrices this prefers the contracting
+        # (input) dim -> Megatron-style partial-sum + small all-reduce,
+        # instead of sharding head_dim, which would force an all-reduce of
+        # the attention-logits tensor (measured 30 TB/chip on deepseek
+        # prefill_32k — see EXPERIMENTS.md §Perf-1).
+        for i in range(len(shape)):
+            if i in frozen_dims:
+                continue
+            if entries[i] is None and shape[i] % _axis_size(mesh, a) == 0 \
+                    and shape[i] > 1:
+                entries[i] = a
+                break
+    return P(*entries)
+
+
+def named(mesh: Mesh, spec_: P, shape: Optional[Sequence[int]] = None
+          ) -> NamedSharding:
+    if shape is not None:
+        return NamedSharding(mesh, fit_spec(spec_, shape, mesh))
+    return NamedSharding(mesh, resolve(spec_, mesh))
+
+
+def _ambient_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def constrain(x, *logical: Optional[str]):
+    """with_sharding_constraint via logical names, resolved & fitted against
+    the ambient `with mesh:` context; no-op outside a mesh.
+
+    Dims that end up unsharded (logical None, or axis dropped by the
+    divisibility fit) are left P.UNCONSTRAINED — the constraint pins only
+    the dims we actively shard and GSPMD chooses the rest. Forcing
+    replication instead measured 13x worse on deepseek prefill
+    (EXPERIMENTS.md §Perf-1 iteration 3)."""
+    m = _ambient_mesh()
+    if m is None or m.size == 1:
+        return x
+    s = fit_spec(spec(*logical), x.shape, m, fallback=False)
+    entries = []
+    for name, e in zip(list(logical) + [None] * (x.ndim - len(logical)),
+                       list(s) + [None] * (x.ndim - len(s))):
+        if e is None:
+            entries.append(None if name == "rep" else P.UNCONSTRAINED)
+        else:
+            entries.append(e)
+    return jax.lax.with_sharding_constraint(x, P(*entries))

@@ -1,0 +1,75 @@
+"""Inception Distillation tests — the Table 6 claim at reduced scale:
+distillation improves the weakest classifier f^(1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.gnn import (DistillConfig, GNNConfig, evaluate_classifier,
+                       load_dataset, train_nai)
+from repro.gnn.distill import _fit, _tc
+from repro.gnn.graph import propagated_series
+from repro.gnn.models import apply_classifier, init_classifiers
+from repro.core.inception_distill import hard_ce
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = load_dataset("flickr-like", scale=0.02, seed=0)
+    cfg = GNNConfig("sgc", g.features.shape[1], g.num_classes, k=3,
+                    hidden=32, mlp_layers=2, dropout=0.0)
+    series = np.stack(propagated_series(g, g.features, cfg.k))
+    return g, cfg, series
+
+
+def _train_f1_no_distill(cfg, g, series, epochs=120):
+    """f^(1) trained with hard labels only (the 'w/o ID' row of Table 6)."""
+    params = init_classifiers(cfg, jax.random.PRNGKey(0))[1]
+    feats_vl = jnp.asarray(series[:, g.train_idx])
+    y = jnp.asarray(g.labels[g.train_idx])
+
+    def loss(p, rng):
+        return hard_ce(apply_classifier(cfg, p, feats_vl, 1, key=rng), y)
+
+    params, _ = _fit(loss, params, epochs,
+                     _tc(DistillConfig()), jax.random.PRNGKey(1))
+    return params
+
+
+def test_distillation_improves_f1(setup):
+    g, cfg, series = setup
+    base = _train_f1_no_distill(cfg, g, series)
+    acc_no_id = evaluate_classifier(cfg, base, series, g.labels, g.test_idx, 1)
+
+    dc = DistillConfig(epochs_base=120, epochs_offline=80, epochs_online=80)
+    params, _ = train_nai(cfg, g, dc)
+    acc_id = evaluate_classifier(cfg, params["cls"][1], series, g.labels,
+                                 g.test_idx, 1)
+    # Table 6: ID should not hurt, and usually helps, the weakest student
+    assert acc_id >= acc_no_id - 0.01, (acc_id, acc_no_id)
+
+
+def test_all_orders_trained(setup):
+    g, cfg, series = setup
+    dc = DistillConfig(epochs_base=80, epochs_offline=40, epochs_online=40)
+    params, info = train_nai(cfg, g, dc)
+    assert set(params["cls"]) == {1, 2, 3}
+    for l in range(1, 4):
+        acc = evaluate_classifier(cfg, params["cls"][l], series, g.labels,
+                                  g.test_idx, l)
+        assert acc > 1.5 / cfg.num_classes, (l, acc)  # far above chance
+    assert "online_loss" in info and np.isfinite(info["online_loss"])
+
+
+@pytest.mark.parametrize("base_model", ["s2gc", "sign", "gamlp"])
+def test_generalization_to_other_base_models(base_model):
+    """Table 7: NAI applies to any linear-propagation GNN."""
+    g = load_dataset("pubmed-like", scale=0.04, seed=1)
+    cfg = GNNConfig(base_model, g.features.shape[1], g.num_classes, k=3,
+                    hidden=24, mlp_layers=2, dropout=0.0)
+    dc = DistillConfig(epochs_base=60, epochs_offline=30, epochs_online=30)
+    params, _ = train_nai(cfg, g, dc)
+    series = np.stack(propagated_series(g, g.features, cfg.k))
+    acc = evaluate_classifier(cfg, params["cls"][cfg.k], series, g.labels,
+                              g.test_idx, cfg.k)
+    assert acc > 1.5 / cfg.num_classes, acc

@@ -1,0 +1,46 @@
+"""CLI driver smoke tests: the train/serve launchers run end-to-end."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=420):
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-m"] + args, cwd=ROOT, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_lm_smoke_cli(tmp_path):
+    ckpt = str(tmp_path / "lm.msgpack")
+    out = _run(["repro.launch.train", "--arch", "rwkv6-3b", "--smoke",
+                "--steps", "6", "--batch", "2", "--seq", "32",
+                "--log-every", "2", "--ckpt", ckpt])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "loss=" in out.stdout
+    assert os.path.exists(ckpt)
+
+
+def test_train_gnn_cli():
+    out = _run(["repro.launch.train", "--gnn", "pubmed-like", "--k", "2",
+                "--scale", "0.03", "--epochs", "20"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "NAI acc=" in out.stdout
+
+
+def test_serve_lm_cli():
+    out = _run(["repro.launch.serve", "--arch", "gemma-7b", "--smoke",
+                "--tokens", "6", "--batch", "2"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ms/step" in out.stdout
+
+
+def test_serve_gnn_cli():
+    out = _run(["repro.launch.serve", "--gnn", "pubmed-like", "--requests",
+                "200", "--epochs", "20", "--k", "2", "--scale", "0.03"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "p50=" in out.stdout

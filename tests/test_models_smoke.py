@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of each
+assigned family runs one forward + one train step + one decode step on CPU,
+asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import TrainConfig
+from repro.configs import ARCHS, smoke
+from repro.models import decoder_lm as M
+from repro.optim import adamw_init, adamw_update
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32)}
+    if cfg.is_encdec:
+        b["frontend"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    elif cfg.num_image_tokens:
+        b["frontend"] = jnp.asarray(
+            rng.standard_normal((B, cfg.num_image_tokens, cfg.d_model)),
+            jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nans(arch):
+    cfg = smoke(ARCHS[arch])
+    assert cfg.d_model <= 512 and cfg.num_layers <= 8
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b = _batch(cfg)
+    logits, aux, _ = M.forward(cfg, params, b["tokens"],
+                               frontend=b.get("frontend"))
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step(arch):
+    cfg = smoke(ARCHS[arch])
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tc = TrainConfig(learning_rate=1e-3, total_steps=10, warmup_steps=0)
+    opt = adamw_init(params, tc)
+    b = _batch(cfg)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        M.loss_fn, argnums=1, has_aux=True)(cfg, params, b)
+    assert bool(jnp.isfinite(loss))
+    new_params, opt, om = adamw_update(grads, opt, params, tc, 1e-3)
+    assert bool(jnp.isfinite(om["grad_norm"]))
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, x: a + float(jnp.sum(jnp.abs(x))), jax.tree.map(
+            lambda a, b_: a - b_, new_params, params), 0.0)
+    assert delta > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = smoke(ARCHS[arch])
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b = _batch(cfg)
+    cache = M.init_cache(cfg, 2, 16)
+    logits, cache2 = M.decode_step(cfg, params, cache, b["tokens"][:, :1],
+                                   jnp.int32(0), frontend=b.get("frontend"))
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert jax.tree.structure(cache2) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("arch", ["granite-34b", "recurrentgemma-9b",
+                                  "rwkv6-3b", "whisper-small",
+                                  "llama-3.2-vision-11b", "dbrx-132b"])
+def test_decode_matches_full(arch):
+    """Token-by-token decode reproduces the full-sequence forward."""
+    import dataclasses
+    cfg = smoke(ARCHS[arch])
+    if cfg.num_experts:   # avoid routing capacity-drop mismatch (tested above)
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    b = _batch(cfg, B=2, S=12, seed=3)
+    fe = b.get("frontend")
+    full, _, _ = M.forward(cfg, params, b["tokens"], frontend=fe)
+    c = M.init_cache(cfg, 2, 12)
+    if cfg.is_encdec or cfg.num_image_tokens:
+        c = M.seed_frontend_cache(cfg, params, c, fe)
+    for t in range(12):
+        logits, c = M.decode_step(cfg, params, c, b["tokens"][:, t:t + 1],
+                                  jnp.int32(t), frontend=fe)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full[:, -1]), atol=5e-4)
+
+
+def test_prefill_matches_forward_last_logits():
+    cfg = smoke(ARCHS["granite-34b"])
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    b = _batch(cfg, B=2, S=12)
+    full, _, _ = M.forward(cfg, params, b["tokens"])
+    last, cache = M.prefill_step(cfg, params, b["tokens"])
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[:, -1]),
+                               atol=1e-5)
+    # prefill cache (padded by 4 slots) continues decode correctly
+    def pad_seq(a):
+        if a.ndim >= 3 and a.shape[-3] == 12:
+            widths = [(0, 0)] * a.ndim
+            widths[-3] = (0, 4)
+            return jnp.pad(a, widths)
+        return a
+    ext = jax.tree.map(pad_seq, cache)
+    nxt = jnp.zeros((2, 1), jnp.int32)
+    logits, _ = M.decode_step(cfg, params, ext, nxt, jnp.int32(12))
+    full2, _, _ = M.forward(cfg, params,
+                            jnp.concatenate([b["tokens"], nxt], 1))
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full2[:, -1]), atol=2e-4)

@@ -1,0 +1,115 @@
+"""Unit tests for the NN substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import ModelConfig
+from repro.nn import basic, attention as A
+from repro.nn.params import ParamDef, init_tree
+from repro.nn.moe import apply_moe, moe_defs
+
+CFG = ModelConfig(name="t", arch_type="dense", d_model=64, num_heads=4,
+                  num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=97,
+                  num_layers=2, dtype="float32", param_dtype="float32")
+
+
+def test_rmsnorm_unit_scale():
+    p = init_tree(jax.random.PRNGKey(0), basic.norm_defs(CFG), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 64)) * 7.0
+    y = basic.apply_norm(CFG, p, x)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-4)
+
+
+def test_layernorm_zero_mean():
+    cfg = CFG.scaled(norm_kind="layernorm")
+    p = init_tree(jax.random.PRNGKey(0), basic.norm_defs(cfg), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 64)) + 5.0
+    y = basic.apply_norm(cfg, p, x)
+    np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-4)
+
+
+def test_rotary_preserves_norm_and_relative_phase():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 16))
+    pos = jnp.arange(8)[None]
+    y = basic.rotary(x, pos, 10000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # shifting positions by c rotates q and k identically -> q.k invariant
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 2, 16))
+    def score(off):
+        qr = basic.rotary(q, pos + off, 10000.0)
+        kr = basic.rotary(k, pos + off, 10000.0)
+        return jnp.einsum("bshe,bthe->bsht", qr, kr)
+    np.testing.assert_allclose(score(0), score(17), rtol=1e-3, atol=1e-4)
+
+
+def test_causal_mask_banded():
+    m = A.causal_mask(6, 6, window=2)[0]
+    assert bool(m[3, 3]) and bool(m[3, 2])
+    assert not bool(m[3, 1])      # outside window
+    assert not bool(m[2, 3])      # future
+
+
+def test_self_attention_causality():
+    p = init_tree(jax.random.PRNGKey(0), A.attn_defs(CFG), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 64))
+    pos = jnp.broadcast_to(jnp.arange(10)[None], (2, 10))
+    out1, _ = A.self_attention(CFG, p, x, pos)
+    x2 = x.at[:, 5:].set(0.0)      # perturb the future
+    out2, _ = A.self_attention(CFG, p, x2, pos)
+    np.testing.assert_allclose(out1[:, :5], out2[:, :5], atol=1e-5)
+
+
+def test_chunked_attention_matches_dense():
+    p = init_tree(jax.random.PRNGKey(0), A.attn_defs(CFG), "float32")
+    S = A.Q_CHUNK * 2
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, S, 64))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (1, S))
+    dense, _ = A.self_attention(CFG, p, x, pos)
+    old = A.CHUNK_THRESHOLD
+    try:
+        A.CHUNK_THRESHOLD = 16
+        chunked, _ = A.self_attention(CFG, p, x, pos)
+    finally:
+        A.CHUNK_THRESHOLD = old
+    np.testing.assert_allclose(dense, chunked, atol=2e-5)
+
+
+@pytest.mark.parametrize("kind", ["swiglu", "geglu", "gelu"])
+def test_mlp_kinds(kind):
+    cfg = CFG.scaled(mlp_kind=kind)
+    p = init_tree(jax.random.PRNGKey(0), basic.mlp_defs(cfg), "float32")
+    y = basic.apply_mlp(cfg, p, jnp.ones((2, 3, 64)))
+    assert y.shape == (2, 3, 64)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_moe_capacity_and_aux():
+    cfg = CFG.scaled(num_experts=4, experts_per_token=2, capacity_factor=8.0)
+    p = init_tree(jax.random.PRNGKey(0), moe_defs(cfg), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+    y, aux = apply_moe(cfg, p, x)
+    assert y.shape == x.shape
+    assert float(aux) > 0.0
+    # with huge capacity nothing drops: output invariant to batch order
+    perm = jnp.array([1, 0])
+    y2, _ = apply_moe(cfg, p, x[perm])
+    np.testing.assert_allclose(y2, y[perm], atol=1e-5)
+
+
+def test_moe_top1_rowsum():
+    """top-k gate weights renormalize to 1 -> identical expert weights give
+    the dense-FFN result regardless of routing."""
+    cfg = CFG.scaled(num_experts=4, experts_per_token=2, capacity_factor=8.0)
+    p = init_tree(jax.random.PRNGKey(0), moe_defs(cfg), "float32")
+    p = dict(p, w_gate=jnp.broadcast_to(p["w_gate"][:1], p["w_gate"].shape),
+             w_up=jnp.broadcast_to(p["w_up"][:1], p["w_up"].shape),
+             w_down=jnp.broadcast_to(p["w_down"][:1], p["w_down"].shape))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 64))
+    y, _ = apply_moe(cfg, p, x)
+    h = jax.nn.silu(x @ p["w_gate"][0]) * (x @ p["w_up"][0])
+    dense = h @ p["w_down"][0]
+    np.testing.assert_allclose(y, dense, atol=1e-4)

@@ -1,0 +1,159 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.inception_distill import ensemble_teacher, hard_ce, soft_ce
+from repro.gnn.graph import Graph, add_self_loops, edge_coefficients, spmm
+from repro.launch.hlo_analysis import _shape_bytes, _shape_elems
+from repro.sharding.logical import fit_spec
+from jax.sharding import PartitionSpec as P
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _graph_from_edges(n, pairs):
+    u = np.array([p[0] % n for p in pairs] + [0], np.int64)
+    v = np.array([p[1] % n for p in pairs] + [1 % n], np.int64)
+    keep = u != v
+    u, v = u[keep], v[keep]
+    if len(u) == 0:
+        u, v = np.array([0]), np.array([1 % n])
+    eid = np.unique(np.minimum(u, v) * n + np.maximum(u, v))
+    u, v = (eid // n).astype(np.int32), (eid % n).astype(np.int32)
+    src = np.concatenate([u, v])
+    dst = np.concatenate([v, u])
+    src, dst = add_self_loops(src, dst, n)
+    idx = np.arange(n, dtype=np.int32)
+    return Graph(n=n, src=src, dst=dst,
+                 features=np.zeros((n, 2), np.float32),
+                 labels=np.zeros(n, np.int32), num_classes=2,
+                 train_idx=idx[:1], unlabeled_idx=idx[1:2], test_idx=idx[2:])
+
+
+@given(st.integers(4, 30),
+       st.lists(st.tuples(st.integers(0, 29), st.integers(0, 29)),
+                min_size=1, max_size=60),
+       st.data())
+@settings(**SETTINGS)
+def test_spmm_mass_conservation_r1(n, pairs, data):
+    """r=1 gives the transition matrix ÃD̃^{-1}: column-stochastic, so the
+    total feature mass is conserved by propagation (paper Eq. 1)."""
+    g = _graph_from_edges(n, pairs)
+    x = np.asarray(data.draw(st.lists(st.floats(-5, 5), min_size=n,
+                                      max_size=n)), np.float32)[:, None]
+    coef = edge_coefficients(g, r=1.0)
+    out = spmm(g, coef, x)
+    np.testing.assert_allclose(out.sum(), x.sum(), rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(4, 20),
+       st.lists(st.tuples(st.integers(0, 19), st.integers(0, 19)),
+                min_size=1, max_size=40))
+@settings(**SETTINGS)
+def test_spmm_linearity(n, pairs):
+    g = _graph_from_edges(n, pairs)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, 3)).astype(np.float32)
+    y = rng.standard_normal((n, 3)).astype(np.float32)
+    coef = edge_coefficients(g, 0.5)
+    lhs = spmm(g, coef, 2.0 * x + y)
+    rhs = 2.0 * spmm(g, coef, x) + spmm(g, coef, y)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(2, 6), st.integers(2, 10), st.integers(1, 4),
+       st.floats(1.0, 4.0))
+@settings(**SETTINGS)
+def test_ensemble_teacher_is_distribution(classes, nodes, r, scale):
+    rng = np.random.default_rng(1)
+    logits = [jnp.asarray(rng.standard_normal((nodes, classes)) * scale,
+                          jnp.float32) for _ in range(r)]
+    s = jnp.asarray(rng.standard_normal((classes, 1)), jnp.float32)
+    ens = ensemble_teacher(logits, s)
+    probs = jax.nn.softmax(ens, -1)
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-4)
+    # ensemble of identical predictions = that prediction
+    same = ensemble_teacher([logits[0]] * max(r, 2), s)
+    np.testing.assert_allclose(np.asarray(jax.nn.softmax(same, -1)),
+                               np.asarray(jax.nn.softmax(logits[0], -1)),
+                               rtol=1e-3, atol=1e-4)
+
+
+@given(st.integers(2, 8), st.integers(1, 12), st.floats(1.0, 4.0))
+@settings(**SETTINGS)
+def test_soft_ce_minimized_at_teacher(classes, nodes, T):
+    """KD loss is minimized when student == teacher (cross entropy >=
+    entropy)."""
+    rng = np.random.default_rng(2)
+    t = jnp.asarray(rng.standard_normal((nodes, classes)), jnp.float32)
+    s_other = jnp.asarray(rng.standard_normal((nodes, classes)), jnp.float32)
+    assert float(soft_ce(t, t, T)) <= float(soft_ce(s_other, t, T)) + 1e-6
+
+
+@given(st.integers(2, 10), st.integers(1, 16))
+@settings(**SETTINGS)
+def test_hard_ce_nonnegative(classes, nodes):
+    rng = np.random.default_rng(3)
+    z = jnp.asarray(rng.standard_normal((nodes, classes)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, classes, nodes), jnp.int32)
+    assert float(hard_ce(z, y)) >= 0.0
+
+
+@given(st.lists(st.sampled_from([None, "data", "model", ("data", "model")]),
+                min_size=1, max_size=4),
+       st.lists(st.sampled_from([1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64,
+                                 100, 256]), min_size=1, max_size=4))
+@settings(**SETTINGS)
+def test_fit_spec_always_legal(entries, dims):
+    """fit_spec output must always divide the shape."""
+    import jax
+    n = min(len(entries), len(dims))
+    entries, dims = entries[:n], dims[:n]
+    devs = np.array(jax.devices() * 16)[:16].reshape(4, 4)
+    mesh = jax.sharding.Mesh(devs, ("data", "model"))
+    out = fit_spec(P(*entries), tuple(dims), mesh)
+    sizes = {"data": 4, "model": 4}
+    for e, d in zip(tuple(out), dims):
+        if e is None:
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        prod = int(np.prod([sizes[a] for a in axes]))
+        assert d % prod == 0, (out, dims)
+
+
+@given(st.sampled_from(["f32[16,128]{1,0}", "bf16[2,3,4]", "pred[]",
+                        "(f32[8], s32[4,4])", "u8[100]"]))
+@settings(**SETTINGS)
+def test_shape_parse_consistency(s):
+    assert _shape_bytes(s) >= _shape_elems(s) * 0  # parses without error
+
+
+def test_adamw_converges_quadratic():
+    """Optimizer sanity: minimize ||x - c||^2."""
+    from repro.common import TrainConfig
+    from repro.optim import adamw_init, adamw_update
+    tc = TrainConfig(learning_rate=0.1, weight_decay=0.0, grad_clip=0.0)
+    c = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"x": jnp.zeros(3)}
+    state = adamw_init(params, tc)
+    for _ in range(300):
+        g = {"x": 2 * (params["x"] - c)}
+        params, state, _ = adamw_update(g, state, params, tc, 0.1)
+    np.testing.assert_allclose(np.asarray(params["x"]), np.asarray(c),
+                               atol=1e-2)
+
+
+def test_fit_spec_frozen_layers_dim():
+    """The stacked-scan layers dim must never receive a fallback axis."""
+    import jax
+    from repro.sharding.logical import fit_spec
+    from repro.sharding import spec as logical_spec
+    devs = np.array(jax.devices() * 16)[:16].reshape(4, 4)
+    mesh = jax.sharding.Mesh(devs, ("data", "model"))
+    # (layers=32, heads=40, hd=64): heads won't divide 4 -> axis must NOT
+    # land on the frozen layers dim even though 32 % 4 == 0
+    s = logical_spec("layers", "batch", "heads", None)
+    out = fit_spec(s, (32, 6, 40, 64), mesh)
+    assert tuple(out)[0] is None, out
