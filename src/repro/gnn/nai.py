@@ -61,6 +61,19 @@ def _subgraph_spmm(sup: Support, x: np.ndarray, active_nodes: np.ndarray
     return out, int(emask.sum())
 
 
+def support_stationary_state(g: Graph, sup: Support, x0: np.ndarray,
+                             r: float) -> np.ndarray:
+    """Rank-1 stationary state Â^∞ X at the batch rows (Eq. 7) over the
+    sampled subgraph, float64. Shared by the host and compiled serving
+    paths so their exit distances use the same arithmetic (the compiled
+    path then casts to float32; nodes within f32 rounding of T_s may
+    exit one order apart across paths)."""
+    dt = (g.degrees[sup.nodes] + 1).astype(np.float64)
+    denom = 2.0 * sup.sub_edges + len(sup)
+    s_sum = ((dt ** (1.0 - r))[:, None] * x0).sum(axis=0)
+    return ((dt[:sup.n_batch] ** r) / denom)[:, None] * s_sum[None, :]
+
+
 def _needed_mask(sup: Support, active_batch: np.ndarray, remaining_hops: int
                  ) -> np.ndarray:
     """Support nodes within `remaining_hops` of any active batch node —
@@ -94,11 +107,7 @@ def infer_batch_host(cfg: GNNConfig, nai: NAIConfig, params, g: Graph,
             "classification": 0.0}
 
     # line 2: stationary state over the sampled subgraph (Eq. 7, rank-1)
-    dt = (g.degrees[sup.nodes] + 1).astype(np.float64)
-    denom = 2.0 * sup.sub_edges + len(sup)
-    s_vec = (dt ** (1.0 - cfg.r))[:, None] * x            # (S, f)
-    s_sum = s_vec.sum(axis=0)
-    x_inf = ((dt[:nb] ** cfg.r) / denom)[:, None] * s_sum[None, :]
+    x_inf = support_stationary_state(g, sup, x, cfg.r)
     macs["stationary"] += len(sup) * f + nb * f
 
     preds = np.full(nb, -1, np.int64)
@@ -180,23 +189,52 @@ def order_distribution(result: NAIResult, k: int) -> np.ndarray:
 
 # --------------------------------------------------------------- jax masked
 def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
-                       sup_src, sup_dst, sup_coef, x0, x_inf, n_batch: int):
+                       sup_src, sup_dst, sup_coef, x0, x_inf, n_batch: int,
+                       *, spmm_impl: str = "segment", ell=None,
+                       step_active=None, interpret: bool = True):
     """Compiled NAP: fori over orders with exit masks (static shapes).
 
     Returns (exit_order (nb,), stacked features (T_max+1, S, f)).
-    Classification happens outside (per-order gather) — this function is the
-    propagation/exit-decision core that the Pallas SpMM kernel accelerates.
+
+    `spmm_impl` selects the propagation operator:
+
+    * ``"segment"`` — jnp segment-sum over the edge list
+      (sup_src/sup_dst/sup_coef); every row is updated every step.
+    * ``"block_ell"`` — the Pallas block-ELL kernel. `ell` is the operand
+      triple ``(tiles, tile_col, valid)`` and `step_active` is the
+      (T_max, n_rb) static per-step row-block predicate from
+      `repro.gnn.packing.step_active_blocks`; it is ANDed with the dynamic
+      any-batch-node-still-active flag, so once the whole batch has exited
+      every remaining step touches zero tiles. Rows in skipped blocks read
+      as zero; by the hop argument in packing.py those values never reach
+      a batch output.
+
+    Per-order classification lives in `make_compiled_infer`, which wraps
+    this core in one jitted function.
     """
     S, f = x0.shape
     tmax = nai.t_max
 
-    def spmm(x):
-        contrib = sup_coef[:, None] * x[sup_src]
-        return jax.ops.segment_sum(contrib, sup_dst, num_segments=S)
+    if spmm_impl == "segment":
+        def spmm(x, l, live):
+            contrib = sup_coef[:, None] * x[sup_src]
+            return jax.ops.segment_sum(contrib, sup_dst, num_segments=S)
+    elif spmm_impl == "block_ell":
+        from repro.kernels.spmm import spmm_block_ell
+        tiles, tile_col, valid = ell
+        sa = jnp.asarray(step_active, jnp.int32)
+
+        def spmm(x, l, live):
+            active = sa[l - 1] * live
+            return spmm_block_ell(tiles, tile_col, valid, active, x,
+                                  interpret=interpret)
+    else:
+        raise ValueError(f"unknown spmm_impl {spmm_impl!r}")
 
     def body(l, carry):
         x, series, exit_order = carry
-        x = spmm(x)
+        live = jnp.any(exit_order == 0).astype(jnp.int32)
+        x = spmm(x, l, live)
         series = series.at[l].set(x)
         d = jnp.linalg.norm(x[:n_batch] - x_inf, axis=1)
         can_exit = (exit_order == 0) & (l >= nai.t_min) & (l < tmax) \
@@ -210,3 +248,46 @@ def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
         1, tmax + 1, body, (x0, series, exit_order))
     exit_order = jnp.where(exit_order == 0, tmax, exit_order)
     return exit_order, series
+
+
+def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
+                        spmm_impl: str = "block_ell",
+                        interpret: bool = True):
+    """One jitted function: masked NAP propagation + per-order
+    classification (unrolled over orders, selected by exit mask).
+
+    The returned callable takes ``(cls_params, operands, x0, x_inf)`` where
+    `operands` is a dict — ``tiles/tile_col/valid/step_active`` for
+    ``block_ell``, ``src/dst/coef`` for ``segment`` — and returns
+    ``(predictions (nb,), exit_order (nb,))``. All shape specialization
+    happens through jax.jit's cache; callers bucket their operand shapes
+    (repro.gnn.packing) so repeat batches hit it. The number of traced
+    shapes is exposed via the jitted function's ``_cache_size()``.
+    """
+    if spmm_impl not in ("segment", "block_ell"):
+        raise ValueError(f"unknown spmm_impl {spmm_impl!r}")
+    tmax = nai.t_max
+
+    @jax.jit
+    def run(cls_params, operands, x0, x_inf):
+        nb = x_inf.shape[0]
+        if spmm_impl == "block_ell":
+            exit_order, series = infer_batch_masked(
+                cfg, nai, None, None, None, None, x0, x_inf, nb,
+                spmm_impl="block_ell",
+                ell=(operands["tiles"], operands["tile_col"],
+                     operands["valid"]),
+                step_active=operands["step_active"], interpret=interpret)
+        else:
+            exit_order, series = infer_batch_masked(
+                cfg, nai, None, operands["src"], operands["dst"],
+                operands["coef"], x0, x_inf, nb, spmm_impl="segment")
+        preds = jnp.zeros((nb,), jnp.int32)
+        for l in range(1, tmax + 1):
+            feats = series[:l + 1, :nb, :cfg.feat_dim]
+            z = apply_classifier(cfg, cls_params[l], feats, l)
+            preds = jnp.where(exit_order == l,
+                              jnp.argmax(z, -1).astype(jnp.int32), preds)
+        return preds, exit_order
+
+    return run

@@ -1,0 +1,203 @@
+"""Support -> block-ELL packing for the compiled serving path.
+
+Converts the induced subgraph of a sampled `Support` into the static-shape
+operand set consumed by the Pallas block-ELL SpMM kernel
+(`repro.kernels.spmm.spmm_block_ell`), padded to *bucket* sizes so that
+repeat batches of similar size hit the jit compile cache:
+
+* the batch region is padded from `n_batch` to `nb_bucket` rows (pad rows
+  have no edges, zero features, zero stationary state — they exit at T_min
+  and are dropped by slicing results to `nb_real`);
+* support rows follow at `nb_bucket`, and the total row count is padded to
+  an `s_bucket` multiple of CB so feature blocks index cleanly;
+* the per-row-block tile budget `max_tb` is padded to `tb_bucket`.
+
+Buckets grow geometrically ({1,2,3}·2^k), bounding padding overshoot to
+~33% while keeping the number of distinct compiled shapes logarithmic in
+the size range — the bucket policy recorded in ROADMAP.md.
+
+The packer also emits `hop_rb`, the minimum BFS hop per row block, from
+which the per-step NAP row-block predicate follows statically: the value
+X^(l) at a node of hop h can only reach a batch output if h <= T_max - l,
+so row blocks with `hop_rb > T_max - l` are skipped by the kernel at step
+l (and everything is skipped once the whole batch has exited — the
+dynamic part, ANDed in inside the jitted function).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.gnn.sampler import Support
+from repro.kernels.spmm.kernel import CB, FB, RB
+
+_INF_HOP = np.int32(2 ** 30)   # hop assigned to padding rows
+
+
+def next_bucket(x: int, minimum: int = 1) -> int:
+    """Smallest value >= max(x, minimum) in the geometric series
+    {1, 2, 3} * 2^k * minimum (ratio <= 1.5)."""
+    x = max(int(x), minimum)
+    b = minimum
+    while True:
+        for mult in (1, 2, 3):
+            if b * mult >= x:
+                return b * mult
+        b *= 2
+
+
+@dataclasses.dataclass
+class PackedSupport:
+    # block-ELL operands (see repro.kernels.spmm.kernel.spmm_block_ell)
+    tiles: np.ndarray        # (n_rb, tb, RB, CB) f32 coefficient tiles
+    tile_col: np.ndarray     # (n_rb, tb) int32 column-block per tile
+    valid: np.ndarray        # (n_rb, tb) int32 1 = real tile
+    hop_rb: np.ndarray       # (n_rb,) int32 min BFS hop per row block
+    # padded batch layout
+    n_batch: int             # bucket-padded batch region (rows [0, n_batch))
+    nb_real: int             # true batch size (rows [0, nb_real) are real)
+    n_pad: int               # total padded rows (multiple of CB)
+    s_real: int              # true support size
+    # padded dense operands
+    x0: np.ndarray           # (n_pad, f_pad) f32 features at support rows
+    x_inf: np.ndarray        # (n_batch, f_pad) f32 stationary state
+    # bucket-padded edge list in padded row ids (for the segment-sum
+    # compiled path; pad edges have coef 0 so they contribute nothing)
+    src: np.ndarray          # (e_pad,) int32
+    dst: np.ndarray          # (e_pad,) int32
+    coef: np.ndarray         # (e_pad,) f32
+
+    @property
+    def n_rb(self) -> int:
+        return self.tiles.shape[0]
+
+    @property
+    def density(self) -> float:
+        return float(self.valid.mean()) if self.valid.size else 0.0
+
+    def shape_key(self, spmm_impl: str = "block_ell") -> tuple:
+        """The jit-cache key: exactly the static shapes the compiled
+        function specializes on for the given SpMM implementation (the
+        other path's operand shapes must not perturb compile counting)."""
+        if spmm_impl == "block_ell":
+            return ("block_ell", self.n_batch, self.n_pad,
+                    self.tiles.shape[1], self.x0.shape[1])
+        return ("segment", self.n_batch, self.n_pad, self.x0.shape[1],
+                len(self.src))
+
+
+def _remap_rows(sup: Support, nb_bucket: int) -> np.ndarray:
+    """Local support id -> padded row id (batch region padded to
+    nb_bucket)."""
+    shift = nb_bucket - sup.n_batch
+    ids = np.arange(len(sup), dtype=np.int64)
+    return np.where(ids < sup.n_batch, ids, ids + shift)
+
+
+def _pad_rows(x: np.ndarray, row_of: np.ndarray, n_pad: int, f_pad: int
+              ) -> np.ndarray:
+    out = np.zeros((n_pad, f_pad), np.float32)
+    out[row_of, :x.shape[1]] = x
+    return out
+
+
+def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
+                 nb_bucket: Optional[int] = None,
+                 s_bucket: Optional[int] = None,
+                 tb_bucket: Optional[int] = None,
+                 e_bucket: Optional[int] = None,
+                 build_tiles: bool = True,
+                 build_edges: bool = True) -> PackedSupport:
+    """Pack a sampled `Support` (+ its features and per-batch-node
+    stationary state) into bucket-padded block-ELL operands.
+
+    x0 (S, f) support-row features; x_inf (n_batch, f) stationary state.
+    Explicit buckets are FLOORS (must be legal sizes: s_bucket a CB
+    multiple); the packer grows past them when the support needs more.
+    The serving engine passes its per-shape high-water marks here so that
+    a smaller follow-up batch reuses the previous compiled shape.
+
+    `build_tiles=False` skips tile construction entirely (tiles/tile_col/
+    valid come back with a zero tile budget) — the segment-sum path only
+    consumes the edge list, and a dense hub row block can push the tile
+    tensor to GBs on large supports. Symmetrically `build_edges=False`
+    skips the bucket-padded edge list the block-ELL path never reads."""
+    if s_bucket and s_bucket % CB:
+        raise ValueError(f"s_bucket {s_bucket} not a CB multiple")
+    nb, S = sup.n_batch, len(sup)
+    nb_bucket = max(next_bucket(nb, RB), nb_bucket or 0)
+    rows_needed = nb_bucket + (S - nb)
+    n_pad = max(next_bucket(-(-rows_needed // CB), 1) * CB, s_bucket or 0)
+
+    row_of = _remap_rows(sup, nb_bucket)
+    src = row_of[sup.src]
+    dst = row_of[sup.dst]
+
+    # --- vectorized block-ELL build (cf. repro.kernels.spmm.ops, which
+    # loops per tile; this path is a handful of numpy passes)
+    n_rb, n_cb = n_pad // RB, n_pad // CB
+    if build_tiles:
+        rb = dst // RB
+        cb = src // CB
+        key = rb * n_cb + cb
+        uniq, inverse = np.unique(key, return_inverse=True)
+        tile_rb = (uniq // n_cb).astype(np.int64)
+        tile_cb = (uniq % n_cb).astype(np.int32)
+        counts = np.bincount(tile_rb, minlength=n_rb)
+        tb_needed = max(int(counts.max()) if len(uniq) else 1, 1)
+        tb = max(next_bucket(tb_needed, 1), tb_bucket or 0)
+
+        # slot of each unique tile within its row block: uniq is sorted,
+        # so tiles of one rb are contiguous and column-sorted
+        first_of_rb = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        slot = np.arange(len(uniq), dtype=np.int64) - first_of_rb[tile_rb]
+
+        tiles = np.zeros((n_rb, tb, RB, CB), np.float32)
+        tile_col = np.zeros((n_rb, tb), np.int32)
+        valid = np.zeros((n_rb, tb), np.int32)
+        tile_col[tile_rb, slot] = tile_cb
+        valid[tile_rb, slot] = 1
+        np.add.at(tiles, (rb, slot[inverse], dst % RB, src % CB), sup.coef)
+    else:
+        tiles = np.zeros((n_rb, 0, RB, CB), np.float32)
+        tile_col = np.zeros((n_rb, 0), np.int32)
+        valid = np.zeros((n_rb, 0), np.int32)
+
+    # --- per-row hop -> per-row-block min hop
+    hop_row = np.full(n_pad, _INF_HOP, np.int32)
+    hop_row[row_of] = sup.hop
+    hop_rb = hop_row.reshape(n_rb, RB).min(axis=1)
+
+    f_pad = -(-x0.shape[1] // FB) * FB
+    x0_p = _pad_rows(np.asarray(x0, np.float32), row_of, n_pad, f_pad)
+    xi_p = np.zeros((nb_bucket, f_pad), np.float32)
+    xi_p[:nb, :x_inf.shape[1]] = x_inf
+
+    # bucket-padded edge list (segment-sum path): pad with zero-coef
+    # self-edges on the last (always padding or hop-max) row
+    if build_edges:
+        e_pad = max(next_bucket(len(src), 1), e_bucket or 0)
+        src_p = np.full(e_pad, n_pad - 1, np.int32)
+        dst_p = np.full(e_pad, n_pad - 1, np.int32)
+        coef_p = np.zeros(e_pad, np.float32)
+        src_p[:len(src)] = src
+        dst_p[:len(dst)] = dst
+        coef_p[:len(sup.coef)] = sup.coef
+    else:
+        src_p = np.empty(0, np.int32)
+        dst_p = np.empty(0, np.int32)
+        coef_p = np.empty(0, np.float32)
+    return PackedSupport(tiles=tiles, tile_col=tile_col, valid=valid,
+                         hop_rb=hop_rb, n_batch=nb_bucket, nb_real=nb,
+                         n_pad=n_pad, s_real=S, x0=x0_p, x_inf=xi_p,
+                         src=src_p, dst=dst_p, coef=coef_p)
+
+
+def step_active_blocks(hop_rb: np.ndarray, t_max: int) -> np.ndarray:
+    """(t_max, n_rb) int32: row blocks whose X^(l) value can still reach a
+    batch output at step l = 1..t_max (hop <= T_max - l). Row 0 of the
+    result is step l=1."""
+    ls = np.arange(1, t_max + 1, dtype=np.int64)[:, None]
+    return (hop_rb[None, :] <= t_max - ls).astype(np.int32)

@@ -2,9 +2,21 @@
 inference over unseen nodes with latency constraints).
 
 Requests (node ids) arrive on a queue; the batch former groups them up to
-`batch_size` or `max_wait_s`; each batch runs Algorithm 1 via
-`infer_batch_host`. Latency percentiles and the exit-order histogram are
-tracked per engine — the quantities a production deployment would alarm on.
+`batch_size` or `max_wait_s`; each batch runs Algorithm 1. Latency
+percentiles and the exit-order histogram are tracked per engine — the
+quantities a production deployment would alarm on.
+
+Two serving modes:
+
+* ``mode="host"`` — the faithful numpy path (`infer_batch_host`), with
+  real frontier shrinking and MAC accounting.
+* ``mode="compiled"`` — the end-to-end compiled path: vectorized support
+  sampling -> bucket-padded block-ELL packing (repro.gnn.packing) -> one
+  jitted function doing Pallas-SpMM masked NAP plus per-order
+  classification. Operand shapes are bucketed and held at per-batch-size
+  high-water marks, so repeat batches hit the jit compile cache;
+  `jit_stats` counts compiles vs hits (alarm on compiles in steady
+  state).
 """
 from __future__ import annotations
 
@@ -13,11 +25,16 @@ import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.gnn.graph import Graph
 from repro.gnn.models import GNNConfig
-from repro.gnn.nai import NAIConfig, infer_batch_host
+from repro.gnn.nai import (NAIConfig, infer_batch_host, make_compiled_infer,
+                           support_stationary_state)
+from repro.gnn.packing import next_bucket, pack_support, step_active_blocks
+from repro.gnn.sampler import sample_support
+from repro.kernels.spmm.kernel import RB
 
 
 @dataclasses.dataclass
@@ -54,14 +71,82 @@ class EngineStats:
 
 class NAIServingEngine:
     def __init__(self, cfg: GNNConfig, nai: NAIConfig, params, graph: Graph,
-                 *, max_wait_s: float = 0.01):
+                 *, max_wait_s: float = 0.01, mode: str = "host",
+                 spmm_impl: str = "block_ell", interpret: bool = True):
+        if mode not in ("host", "compiled"):
+            raise ValueError(f"unknown mode {mode!r}")
         self.cfg = cfg
         self.nai = nai
         self.params = params
         self.graph = graph
         self.max_wait_s = max_wait_s
+        self.mode = mode
+        self.spmm_impl = spmm_impl
         self.queue: Deque[Request] = deque()
         self.stats = EngineStats()
+        # compiled-path state: jitted runner + bucket high-water marks
+        # keyed by padded batch size -> (s_bucket, tb_bucket, e_bucket)
+        self.jit_stats: Dict[str, int] = {"compiles": 0, "hits": 0}
+        self._runner = None
+        self._bucket_hwm: Dict[int, Tuple[int, int, int]] = {}
+        self._seen_keys: set = set()
+        if mode == "compiled":
+            self._runner = make_compiled_infer(
+                cfg, nai, spmm_impl=spmm_impl, interpret=interpret)
+            self._cls_params = {
+                l: {k: jnp.asarray(v) for k, v in p.items()}
+                for l, p in params["cls"].items()}
+
+    def jit_cache_size(self) -> int:
+        """Shapes traced by the compiled runner (0 in host mode)."""
+        return self._runner._cache_size() if self._runner is not None else 0
+
+    def _infer_compiled(self, nodes: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized sample -> block-ELL pack -> jitted masked NAI +
+        classification. `nodes` must be duplicate-free."""
+        g, cfg, nai = self.graph, self.cfg, self.nai
+        sup = sample_support(g, nodes, nai.t_max, cfg.r)
+        nb = sup.n_batch
+        x0 = g.features[sup.nodes].astype(np.float32)
+        x_inf = support_stationary_state(g, sup, x0, cfg.r
+                                         ).astype(np.float32)
+
+        nb_bucket = next_bucket(nb, RB)
+        hwm = self._bucket_hwm.get(nb_bucket, (0, 0, 0))
+        packed = pack_support(sup, x0, x_inf, nb_bucket=nb_bucket,
+                              s_bucket=hwm[0], tb_bucket=hwm[1],
+                              e_bucket=hwm[2],
+                              build_tiles=self.spmm_impl == "block_ell",
+                              build_edges=self.spmm_impl == "segment")
+        self._bucket_hwm[nb_bucket] = (
+            max(hwm[0], packed.n_pad), max(hwm[1], packed.tiles.shape[1]),
+            max(hwm[2], len(packed.src)))
+
+        key = packed.shape_key(self.spmm_impl)
+        if key in self._seen_keys:
+            self.jit_stats["hits"] += 1
+        else:
+            self._seen_keys.add(key)
+            self.jit_stats["compiles"] += 1
+
+        if self.spmm_impl == "block_ell":
+            operands = {
+                "tiles": jnp.asarray(packed.tiles),
+                "tile_col": jnp.asarray(packed.tile_col),
+                "valid": jnp.asarray(packed.valid),
+                "step_active": jnp.asarray(
+                    step_active_blocks(packed.hop_rb, nai.t_max)),
+            }
+        else:
+            operands = {"src": jnp.asarray(packed.src),
+                        "dst": jnp.asarray(packed.dst),
+                        "coef": jnp.asarray(packed.coef)}
+        preds, orders = self._runner(self._cls_params, operands,
+                                     jnp.asarray(packed.x0),
+                                     jnp.asarray(packed.x_inf))
+        return (np.asarray(preds)[:packed.nb_real],
+                np.asarray(orders)[:packed.nb_real])
 
     def submit(self, node_ids, now: Optional[float] = None) -> None:
         now = time.perf_counter() if now is None else now
@@ -86,8 +171,16 @@ class NAIServingEngine:
         if not batch:
             return []
         nodes = np.asarray([r.node_id for r in batch])
-        preds, orders, _, _, _ = infer_batch_host(
-            self.cfg, self.nai, self.params, self.graph, nodes)
+        # dedupe per batch (client retries): the sampler requires
+        # duplicate-free batches — duplicated rows would double-count in
+        # the stationary state and skew every exit distance
+        uniq, inv = np.unique(nodes, return_inverse=True)
+        if self.mode == "compiled":
+            p_u, o_u = self._infer_compiled(uniq)
+        else:
+            p_u, o_u, _, _, _ = infer_batch_host(
+                self.cfg, self.nai, self.params, self.graph, uniq)
+        preds, orders = p_u[inv], o_u[inv]
         done = time.perf_counter()
         for r, p, o in zip(batch, preds, orders):
             r.done_s = done

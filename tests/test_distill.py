@@ -61,6 +61,7 @@ def test_all_orders_trained(setup):
     assert "online_loss" in info and np.isfinite(info["online_loss"])
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("base_model", ["s2gc", "sign", "gamlp"])
 def test_generalization_to_other_base_models(base_model):
     """Table 7: NAI applies to any linear-propagation GNN."""

@@ -1,0 +1,115 @@
+"""End-to-end engine parity: `NAIServingEngine(mode="compiled")`
+(vectorized sample -> block-ELL pack -> Pallas SpMM masked NAI ->
+per-order classification, one jitted function) must reproduce the host
+path's predictions and exit orders, and repeat batches of the same bucket
+must not recompile."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.gnn import GNNConfig, init_classifiers, load_dataset
+from repro.gnn.nai import NAIConfig
+from repro.serving import NAIServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = load_dataset("pubmed-like", scale=0.02, seed=4)
+    # one FB feature block keeps interpret-mode Pallas test-sized
+    g = dataclasses.replace(
+        g, features=np.ascontiguousarray(g.features[:, :64]))
+    cfg = GNNConfig("sgc", 64, g.num_classes, k=2, hidden=32, mlp_layers=2)
+    params = {"cls": init_classifiers(cfg, jax.random.PRNGKey(0))}
+    nai = NAIConfig(t_s=6.0, t_min=1, t_max=2, batch_size=32)
+    return g, cfg, params, nai
+
+
+def _serve(engine, nodes):
+    engine.submit(nodes)
+    done = []
+    while engine.queue:
+        done += engine.step()
+    assert [r.node_id for r in done] == list(map(int, nodes))
+    return (np.array([r.prediction for r in done]),
+            np.array([r.exit_order for r in done]))
+
+
+def test_compiled_matches_host(setup):
+    g, cfg, params, nai = setup
+    host = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0)
+    comp = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                            mode="compiled")
+    rng = np.random.default_rng(0)
+    for trial in range(2):
+        nodes = rng.choice(g.test_idx, size=32, replace=False)
+        ph, oh = _serve(host, nodes)
+        pc, oc = _serve(comp, nodes)
+        np.testing.assert_array_equal(pc, ph)
+        np.testing.assert_array_equal(oc, oh)
+        assert (pc >= 0).all() and set(oc) <= {1, 2}
+        # guard: exact order equality is only a fair ask while every exit
+        # distance sits far from T_s — the compiled path evaluates d in
+        # float32 vs the host's float64 (see support_stationary_state).
+        # If a config tweak shrinks this margin, fix the config, not the
+        # engines.
+        from repro.gnn import sample_support
+        from repro.gnn.nai import _subgraph_spmm, support_stationary_state
+        sup = sample_support(g, nodes, nai.t_max, cfg.r)
+        x0 = g.features[sup.nodes].astype(np.float32)
+        x_inf = support_stationary_state(g, sup, x0, cfg.r)
+        x1, _ = _subgraph_spmm(sup, x0, np.ones(len(sup), bool))
+        d = np.linalg.norm(x1[:len(nodes)] - x_inf, axis=1)
+        assert np.abs(d - nai.t_s).min() > 1e-3
+
+
+def test_same_bucket_batch_hits_jit_cache(setup):
+    g, cfg, params, nai = setup
+    comp = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                            mode="compiled")
+    nodes = np.asarray(g.test_idx[:32])
+    p1, _ = _serve(comp, nodes)
+    assert comp.jit_stats == {"compiles": 1, "hits": 0}
+    assert comp.jit_cache_size() == 1
+    # identical batch -> identical buckets -> no recompile
+    p2, _ = _serve(comp, nodes)
+    assert comp.jit_stats == {"compiles": 1, "hits": 1}
+    assert comp.jit_cache_size() == 1
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_high_water_mark_reuses_shape_for_smaller_support(setup):
+    """A later batch whose support fits inside the high-water-mark buckets
+    reuses the compiled shape even though its raw sizes differ."""
+    g, cfg, params, nai = setup
+    comp = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                            mode="compiled", spmm_impl="segment")
+    rng = np.random.default_rng(1)
+    sizes = [32, 32, 32]
+    for i, s in enumerate(sizes):
+        _serve(comp, rng.choice(g.test_idx, size=s, replace=False))
+    # supports differ per batch but land in few buckets; every batch past
+    # the high-water mark is a cache hit
+    assert comp.jit_stats["compiles"] + comp.jit_stats["hits"] == len(sizes)
+    assert comp.jit_cache_size() == comp.jit_stats["compiles"]
+    assert comp.jit_stats["hits"] >= 1
+
+
+def test_engine_dedupes_batch_in_both_modes(setup):
+    """Duplicate node ids within one batch (client retries) must get
+    consistent results, and the two modes must agree — duplicated rows
+    would double-count in the stationary state and skew exit distances."""
+    g, cfg, params, nai = setup
+    base = np.asarray(g.test_idx[:8])
+    nodes = np.concatenate([base, base[:4]])
+    out = {}
+    for mode in ("host", "compiled"):
+        eng = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                               mode=mode)
+        preds, orders = _serve(eng, nodes)
+        np.testing.assert_array_equal(preds[:4], preds[8:])
+        np.testing.assert_array_equal(orders[:4], orders[8:])
+        out[mode] = (preds, orders)
+    np.testing.assert_array_equal(out["host"][0], out["compiled"][0])
+    np.testing.assert_array_equal(out["host"][1], out["compiled"][1])

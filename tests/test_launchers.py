@@ -1,4 +1,7 @@
-"""CLI driver smoke tests: the train/serve launchers run end-to-end."""
+"""CLI driver smoke tests: the train/serve launchers run end-to-end.
+
+Whole module is `slow`: each test forks a fresh interpreter and retrains
+from scratch; tier-1 covers the same code paths in-process."""
 import os
 import subprocess
 import sys
@@ -6,6 +9,8 @@ import sys
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+pytestmark = pytest.mark.slow
 
 
 def _run(args, timeout=420):

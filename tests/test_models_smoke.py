@@ -76,6 +76,7 @@ def test_decode_step(arch):
     assert jax.tree.structure(cache2) == jax.tree.structure(cache)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["granite-34b", "recurrentgemma-9b",
                                   "rwkv6-3b", "whisper-small",
                                   "llama-3.2-vision-11b", "dbrx-132b"])

@@ -1,4 +1,8 @@
 """Property-based tests (hypothesis) on system invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,6 +10,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.inception_distill import ensemble_teacher, hard_ce, soft_ce
 from repro.gnn.graph import Graph, add_self_loops, edge_coefficients, spmm
+from repro.gnn.sampler import sample_support
 from repro.launch.hlo_analysis import _shape_bytes, _shape_elems
 from repro.sharding.logical import fit_spec
 from jax.sharding import PartitionSpec as P
@@ -61,6 +66,54 @@ def test_spmm_linearity(n, pairs):
     lhs = spmm(g, coef, 2.0 * x + y)
     rhs = 2.0 * spmm(g, coef, x) + spmm(g, coef, y)
     np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------- sampler invariants
+@given(st.integers(6, 30),
+       st.lists(st.tuples(st.integers(0, 29), st.integers(0, 29)),
+                min_size=1, max_size=60),
+       st.integers(1, 5), st.integers(1, 3), st.floats(0.1, 0.9),
+       st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_sampler_invariants(n, pairs, bs, hops, r, seed):
+    """Supporting-set invariants (Algorithm 1 line 3): batch nodes come
+    first at hop 0, hop layers are monotone non-decreasing in discovery
+    order and bounded by `hops`, and every propagation coefficient is
+    strictly positive."""
+    g = _graph_from_edges(n, pairs)
+    batch = np.random.default_rng(seed).permutation(n)[:min(bs, n)]
+    sup = sample_support(g, batch, hops, r)
+    nb = len(batch)
+    assert sup.n_batch == nb
+    assert np.array_equal(sup.nodes[:nb], batch)
+    assert (sup.hop[:nb] == 0).all()
+    assert (np.diff(sup.hop) >= 0).all()          # hop monotonicity
+    assert sup.hop.max() <= hops
+    assert (sup.coef > 0).all()                   # coefficient positivity
+    # support nodes are unique and every edge endpoint is in range
+    assert len(np.unique(sup.nodes)) == len(sup)
+    assert sup.src.max(initial=-1) < len(sup)
+    assert sup.dst.max(initial=-1) < len(sup)
+
+
+@given(st.integers(6, 24),
+       st.lists(st.tuples(st.integers(0, 23), st.integers(0, 23)),
+                min_size=1, max_size=50),
+       st.integers(1, 4), st.integers(1, 3))
+@settings(**SETTINGS)
+def test_sampler_hop_layers_are_bfs_frontiers(n, pairs, bs, hops):
+    """Every hop-h node has an in-neighbor at hop h-1 (frontier
+    expansion), and no node closer to the batch is labeled farther."""
+    g = _graph_from_edges(n, pairs)
+    batch = np.arange(min(bs, n))
+    sup = sample_support(g, batch, hops, 0.5)
+    hop_of = {int(u): int(h) for u, h in zip(sup.nodes, sup.hop)}
+    indptr, nbr = g.csr()
+    for u, h in zip(sup.nodes, sup.hop):
+        if h == 0:
+            continue
+        preds = [hop_of.get(int(v)) for v in nbr[indptr[u]:indptr[u + 1]]]
+        assert min(p for p in preds if p is not None) == h - 1
 
 
 @given(st.integers(2, 6), st.integers(2, 10), st.integers(1, 4),

@@ -1,0 +1,82 @@
+"""The vectorized frontier-expansion sampler must be bit-identical to the
+legacy per-node dict BFS: same support set in the same discovery order,
+same hop layers, same induced edge list, same coefficients."""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.gnn import load_dataset
+from repro.gnn.sampler import sample_support, sample_support_legacy
+
+
+@functools.lru_cache(maxsize=None)
+def _graph(name, scale, seed):
+    return load_dataset(name, scale=scale, seed=seed)
+
+
+CASES = [("pubmed-like", 0.03, 0), ("flickr-like", 0.008, 1)]
+
+
+@pytest.mark.parametrize("name,scale,seed", CASES)
+@pytest.mark.parametrize("hops", [1, 2, 3])
+@pytest.mark.parametrize("bs", [1, 17, 128])
+def test_vectorized_matches_legacy(name, scale, seed, hops, bs):
+    g = _graph(name, scale, seed)
+    rng = np.random.default_rng(seed + hops + bs)
+    batch = rng.choice(g.test_idx, size=min(bs, len(g.test_idx)),
+                       replace=False)
+    for r in (0.5, 0.3):
+        a = sample_support(g, batch, hops, r)
+        b = sample_support_legacy(g, batch, hops, r)
+        assert np.array_equal(a.nodes, b.nodes)
+        assert np.array_equal(a.hop, b.hop)
+        assert a.n_batch == b.n_batch == len(batch)
+        assert np.array_equal(a.src, b.src)
+        assert np.array_equal(a.dst, b.dst)
+        np.testing.assert_array_equal(a.coef, b.coef)
+        assert a.sub_edges == b.sub_edges
+
+
+def test_isolated_batch_node():
+    """A batch node whose only edge is its self loop still samples."""
+    g = _graph("pubmed-like", 0.03, 0)
+    deg = np.diff(g.csr()[0])
+    lone = int(np.argmin(deg))
+    a = sample_support(g, np.array([lone]), 2, 0.5)
+    b = sample_support_legacy(g, np.array([lone]), 2, 0.5)
+    assert np.array_equal(a.nodes, b.nodes)
+    assert np.array_equal(a.src, b.src)
+    assert a.nodes[0] == lone
+
+
+def test_whole_test_set_batch():
+    """Large batch (the serving engine's full batch) stays identical."""
+    g = _graph("pubmed-like", 0.03, 0)
+    batch = g.test_idx[:  min(300, len(g.test_idx))]
+    a = sample_support(g, batch, 2, 0.5)
+    b = sample_support_legacy(g, batch, 2, 0.5)
+    assert np.array_equal(a.nodes, b.nodes)
+    assert np.array_equal(a.hop, b.hop)
+    assert np.array_equal(a.src, b.src)
+    assert np.array_equal(a.dst, b.dst)
+    np.testing.assert_array_equal(a.coef, b.coef)
+
+
+def test_sampler_invariants_without_hypothesis():
+    """The core sampler invariants, runnable even where the hypothesis
+    property suite (tests/test_property.py) is skipped: batch nodes
+    first at hop 0, hop monotonicity, coefficient positivity, unique
+    support, in-range local edges."""
+    g = _graph("pubmed-like", 0.03, 0)
+    rng = np.random.default_rng(5)
+    for hops in (1, 3):
+        batch = rng.choice(g.test_idx, size=40, replace=False)
+        sup = sample_support(g, batch, hops, 0.5)
+        assert np.array_equal(sup.nodes[:len(batch)], batch)
+        assert (sup.hop[:len(batch)] == 0).all()
+        assert (np.diff(sup.hop) >= 0).all()
+        assert sup.hop.max() <= hops
+        assert (sup.coef > 0).all()
+        assert len(np.unique(sup.nodes)) == len(sup)
+        assert sup.src.max() < len(sup) and sup.dst.max() < len(sup)
