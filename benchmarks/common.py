@@ -4,12 +4,11 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Dict, Tuple
+from typing import Tuple
 
 import numpy as np
 
-from repro.gnn import (DistillConfig, GNNConfig, NAIConfig, accuracy,
-                       infer_all, load_dataset, train_nai)
+from repro.gnn import DistillConfig, GNNConfig, load_dataset, train_nai
 
 # CPU-budget scale factors per paper dataset (Table 2 shapes, scaled)
 SCALES = {

@@ -5,16 +5,19 @@ time/node, FP time/node, plus acceleration ratios vs vanilla.
 Also reports the two serving paths of `NAIServingEngine` on the same
 trained model: `serve-host` (numpy Algorithm 1 per batch) vs
 `serve-compiled` (vectorized sampling -> bucket-padded packing -> one
-jitted propagate+classify step). The compiled rows use the segment-sum
-SpMM — on CPU the Pallas kernel only runs in interpret mode (emulation,
-not a timing; its structural numbers live in kernel_bench)."""
+jitted propagate+classify step). The full-test-set compiled rows use the
+segment-sum SpMM — on CPU the Pallas kernels only run in interpret mode
+(emulation, not a timing; their structural numbers live in kernel_bench).
+A separate `serve-compiled-impl/*` trio drains the SAME capped node subset
+through one engine per `spmm_impl` (segment / block_ell / fused) so the
+three propagation operators are comparable side by side on identical
+batches."""
 from __future__ import annotations
 
 import time
 
-import numpy as np
 
-from benchmarks.common import K_FOR, csv_row, dataset, grid_search_ts, trained
+from benchmarks.common import csv_row, dataset, grid_search_ts, trained
 from repro.gnn import NAIConfig, accuracy, infer_all
 from repro.gnn.baselines import (run_glnn, run_quantized, run_tinygnn,
                                  run_vanilla)
@@ -112,4 +115,29 @@ def run(datasets=DATASETS) -> list:
                     f"jit_hits={eng.jit_stats['hits']};"
                     f"warm_us_per_node={warm_us:.1f}"),
         ]
+
+        # ---- spmm_impl trio on identical batches: the Pallas impls run
+        # in interpret mode on CPU (emulation — relative numbers only;
+        # the per-step kernel latency comparison lives in kernel_bench),
+        # so cap batch and subset to keep this a side-by-side, not a soak
+        tcfg = NAIConfig(t_s=ts, t_min=1, t_max=2, batch_size=128)
+        subset = g.test_idx[:min(len(g.test_idx), 2 * tcfg.batch_size)]
+        impl_wall = {}
+        for impl in ("segment", "block_ell", "fused"):
+            si, recs_i, eng_i = _serve("compiled", cfg, tcfg, params, g,
+                                       subset, passes=2, spmm_impl=impl)
+            warm_i = [(w, s) for w, s, compiled in recs_i if not compiled]
+            wall = sum(w for w, _ in warm_i)
+            nodes_served = sum(s for _, s in warm_i)
+            impl_wall[impl] = wall
+            speed = ""
+            if impl == "fused" and impl_wall.get("block_ell"):
+                speed = (f";speedup_vs_block_ell="
+                         f"{impl_wall['block_ell'] / max(wall, 1e-9):.2f}x")
+            rows.append(csv_row(
+                f"table3/{name}/NAI-serve-compiled-impl/{impl}",
+                1e6 * wall / max(nodes_served, 1),
+                f"nodes={nodes_served};"
+                f"mean_exit={si.summary()['mean_exit_order']:.2f};"
+                f"jit_compiles={eng_i.jit_stats['compiles']}" + speed))
     return rows

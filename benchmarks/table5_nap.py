@@ -2,7 +2,6 @@
 for T_max in 2..k, with node exit-order distributions."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import csv_row, dataset, grid_search_ts, trained
 from repro.gnn import NAIConfig, accuracy, infer_all, order_distribution

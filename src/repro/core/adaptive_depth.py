@@ -21,14 +21,13 @@ early-exit semantics.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.nn import blocks as B
 from repro.nn.basic import apply_norm
-from repro.sharding import constrain
 
 
 def saturation_distance(x_new: jax.Array, x_old: jax.Array) -> jax.Array:

@@ -12,7 +12,7 @@ transformer early-exit heads).
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

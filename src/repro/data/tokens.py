@@ -6,7 +6,7 @@ frames) for the VLM/audio architectures.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

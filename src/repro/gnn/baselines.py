@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +15,7 @@ import numpy as np
 from repro.common import TrainConfig
 from repro.core.inception_distill import hard_ce, offline_loss
 from repro.gnn.graph import Graph, propagated_series
-from repro.gnn.models import GNNConfig, apply_classifier, classification_macs
-from repro.gnn.sampler import sample_support
+from repro.gnn.models import GNNConfig, apply_classifier
 from repro.nn.params import ParamDef, init_tree
 from repro.optim import adamw_init, adamw_update
 

@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.common import TrainConfig
 from repro.core.inception_distill import (ensemble_teacher, hard_ce,
-                                          offline_loss, online_loss, soft_ce)
+                                          offline_loss, soft_ce)
 from repro.gnn.graph import Graph, propagated_series
 from repro.gnn.models import GNNConfig, apply_classifier, init_classifiers
 from repro.nn.params import ParamDef, init_tree

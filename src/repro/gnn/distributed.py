@@ -19,8 +19,6 @@ distance reduction is local (features sharded), followed by a psum over
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.nn.params import ParamDef, init_tree, spec_tree
+from repro.nn.params import ParamDef, init_tree
 
 
 @dataclasses.dataclass(frozen=True)

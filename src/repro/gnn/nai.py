@@ -61,6 +61,19 @@ def _subgraph_spmm(sup: Support, x: np.ndarray, active_nodes: np.ndarray
     return out, int(emask.sum())
 
 
+def support_stationary_factors(g: Graph, sup: Support, x0: np.ndarray,
+                               r: float) -> Tuple[np.ndarray, np.ndarray]:
+    """The stationary state Â^∞ X at the batch rows (Eq. 7) is rank-1 by
+    construction; return its factors (c (n_batch,), s (f,)) in float64 so
+    x_inf = c ⊗ s. The fused step kernel consumes the factors directly
+    (it never materializes the dense x_inf)."""
+    dt = (g.degrees[sup.nodes] + 1).astype(np.float64)
+    denom = 2.0 * sup.sub_edges + len(sup)
+    s = ((dt ** (1.0 - r))[:, None] * x0).sum(axis=0)
+    c = (dt[:sup.n_batch] ** r) / denom
+    return c, s
+
+
 def support_stationary_state(g: Graph, sup: Support, x0: np.ndarray,
                              r: float) -> np.ndarray:
     """Rank-1 stationary state Â^∞ X at the batch rows (Eq. 7) over the
@@ -68,10 +81,8 @@ def support_stationary_state(g: Graph, sup: Support, x0: np.ndarray,
     paths so their exit distances use the same arithmetic (the compiled
     path then casts to float32; nodes within f32 rounding of T_s may
     exit one order apart across paths)."""
-    dt = (g.degrees[sup.nodes] + 1).astype(np.float64)
-    denom = 2.0 * sup.sub_edges + len(sup)
-    s_sum = ((dt ** (1.0 - r))[:, None] * x0).sum(axis=0)
-    return ((dt[:sup.n_batch] ** r) / denom)[:, None] * s_sum[None, :]
+    c, s = support_stationary_factors(g, sup, x0, r)
+    return c[:, None] * s[None, :]
 
 
 def _needed_mask(sup: Support, active_batch: np.ndarray, remaining_hops: int
@@ -191,7 +202,8 @@ def order_distribution(result: NAIResult, k: int) -> np.ndarray:
 def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
                        sup_src, sup_dst, sup_coef, x0, x_inf, n_batch: int,
                        *, spmm_impl: str = "segment", ell=None,
-                       step_active=None, interpret: bool = True):
+                       step_active=None, x_inf_factors=None,
+                       interpret: bool = True):
     """Compiled NAP: fori over orders with exit masks (static shapes).
 
     Returns (exit_order (nb,), stacked features (T_max+1, S, f)).
@@ -207,13 +219,69 @@ def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
       any-batch-node-still-active flag, so once the whole batch has exited
       every remaining step touches zero tiles. Rows in skipped blocks read
       as zero; by the hop argument in packing.py those values never reach
-      a batch output.
+      a batch output. The exit distance is a separate jnp reduction over
+      the propagated features (one extra HBM read per step).
+    * ``"fused"`` — the fused step kernel (repro.kernels.nap_step): SpMM
+      accumulation, exit distance, per-node exit flags and the next
+      step's per-row-block still-active predicate in one grid pass, so
+      the propagated block never round-trips through HBM between the
+      matmul and the distance check. Same operands as ``block_ell`` plus
+      `x_inf_factors=(c, s)` — the rank-1 stationary-state factors
+      (x_inf = c ⊗ s, see `support_stationary_factors`) streamed into
+      the kernel in place of the dense x_inf — and the squared threshold
+      prefetched; requires the packed layout (n_batch a multiple of RB,
+      T_min/T_max gating applied by disabling the threshold on un-gated
+      steps).
 
     Per-order classification lives in `make_compiled_infer`, which wraps
     this core in one jitted function.
     """
     S, f = x0.shape
     tmax = nai.t_max
+
+    if spmm_impl == "fused":
+        from repro.kernels.nap_step import nap_step_fused
+        from repro.kernels.spmm.kernel import CB, RB
+        if n_batch % RB or S % CB:
+            raise ValueError(
+                f"fused path needs packed operands: n_batch {n_batch} "
+                f"% RB, rows {S} % CB must be 0 (see repro.gnn.packing)")
+        if x_inf_factors is None:
+            raise ValueError("fused path needs x_inf_factors=(c, s), the "
+                             "rank-1 stationary-state factors")
+        c_inf = jnp.asarray(x_inf_factors[0], x0.dtype).reshape(-1, 1)
+        s_inf = jnp.asarray(x_inf_factors[1], x0.dtype).reshape(1, -1)
+        if c_inf.shape[0] != n_batch or s_inf.shape[1] != f:
+            raise ValueError(f"fused path needs factors padded to "
+                             f"({n_batch},) and ({f},), got "
+                             f"{c_inf.shape} {s_inf.shape}")
+        tiles, tile_col, valid = ell
+        sa = jnp.asarray(step_active, jnp.int32)
+        ts2_val = jnp.float32(nai.t_s) ** 2
+
+        def body(l, carry):
+            x, series, exit_order, live = carry
+            active = sa[l - 1] * live
+            nact = (exit_order == 0).astype(jnp.int32)[:, None]
+            # T_min/T_max gating happens inside the kernel: a negative
+            # squared threshold on un-gated steps means nobody exits
+            ts2 = jnp.where((l >= nai.t_min) & (l < tmax),
+                            ts2_val, jnp.float32(-1.0)).reshape(1)
+            x, exits, blk_still = nap_step_fused(
+                tiles, tile_col, valid, active, x, c_inf, s_inf, nact,
+                ts2, interpret=interpret)
+            series = series.at[l].set(x)
+            exit_order = jnp.where(exits[:, 0] != 0, l, exit_order)
+            # the kernel already emitted next step's dynamic predicate
+            live = jnp.any(blk_still != 0).astype(jnp.int32)
+            return x, series, exit_order, live
+
+        series = jnp.zeros((tmax + 1, S, f), x0.dtype).at[0].set(x0)
+        exit_order = jnp.zeros((n_batch,), jnp.int32)
+        _, series, exit_order, _ = jax.lax.fori_loop(
+            1, tmax + 1, body, (x0, series, exit_order, jnp.int32(1)))
+        exit_order = jnp.where(exit_order == 0, tmax, exit_order)
+        return exit_order, series
 
     if spmm_impl == "segment":
         def spmm(x, l, live):
@@ -236,9 +304,12 @@ def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
         live = jnp.any(exit_order == 0).astype(jnp.int32)
         x = spmm(x, l, live)
         series = series.at[l].set(x)
-        d = jnp.linalg.norm(x[:n_batch] - x_inf, axis=1)
+        # squared comparison (not norm < t_s): the same arithmetic the
+        # fused kernel uses, so exit orders stay bit-consistent across
+        # the compiled impls even for distances at the threshold
+        d2 = jnp.sum((x[:n_batch] - x_inf) ** 2, axis=1)
         can_exit = (exit_order == 0) & (l >= nai.t_min) & (l < tmax) \
-            & (d < nai.t_s)
+            & (d2 < jnp.float32(nai.t_s) ** 2)
         exit_order = jnp.where(can_exit, l, exit_order)
         return x, series, exit_order
 
@@ -258,26 +329,31 @@ def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
 
     The returned callable takes ``(cls_params, operands, x0, x_inf)`` where
     `operands` is a dict — ``tiles/tile_col/valid/step_active`` for
-    ``block_ell``, ``src/dst/coef`` for ``segment`` — and returns
-    ``(predictions (nb,), exit_order (nb,))``. All shape specialization
-    happens through jax.jit's cache; callers bucket their operand shapes
-    (repro.gnn.packing) so repeat batches hit it. The number of traced
-    shapes is exposed via the jitted function's ``_cache_size()``.
+    ``block_ell``, the same plus ``c_inf/s_inf`` (rank-1 stationary-state
+    factors) for ``fused``, ``src/dst/coef`` for ``segment`` — and
+    returns ``(predictions (nb,), exit_order (nb,))``. All shape
+    specialization happens through jax.jit's cache; callers bucket their
+    operand shapes (repro.gnn.packing) so repeat batches hit it. The
+    number of traced shapes is exposed via the jitted function's
+    ``_cache_size()``.
     """
-    if spmm_impl not in ("segment", "block_ell"):
+    if spmm_impl not in ("segment", "block_ell", "fused"):
         raise ValueError(f"unknown spmm_impl {spmm_impl!r}")
     tmax = nai.t_max
 
     @jax.jit
     def run(cls_params, operands, x0, x_inf):
         nb = x_inf.shape[0]
-        if spmm_impl == "block_ell":
+        if spmm_impl in ("block_ell", "fused"):
+            factors = (operands["c_inf"], operands["s_inf"]) \
+                if spmm_impl == "fused" else None
             exit_order, series = infer_batch_masked(
                 cfg, nai, None, None, None, None, x0, x_inf, nb,
-                spmm_impl="block_ell",
+                spmm_impl=spmm_impl,
                 ell=(operands["tiles"], operands["tile_col"],
                      operands["valid"]),
-                step_active=operands["step_active"], interpret=interpret)
+                step_active=operands["step_active"],
+                x_inf_factors=factors, interpret=interpret)
         else:
             exit_order, series = infer_batch_masked(
                 cfg, nai, None, operands["src"], operands["dst"],

@@ -2,8 +2,10 @@
 
 Converts the induced subgraph of a sampled `Support` into the static-shape
 operand set consumed by the Pallas block-ELL SpMM kernel
-(`repro.kernels.spmm.spmm_block_ell`), padded to *bucket* sizes so that
-repeat batches of similar size hit the jit compile cache:
+(`repro.kernels.spmm.spmm_block_ell`) and the fused NAP step kernel
+(`repro.kernels.nap_step.nap_step_fused` — same tiles plus the bucketed
+`x_inf` and a prefetched squared threshold), padded to *bucket* sizes so
+that repeat batches of similar size hit the jit compile cache:
 
 * the batch region is padded from `n_batch` to `nb_bucket` rows (pad rows
   have no edges, zero features, zero stationary state — they exit at T_min
@@ -68,6 +70,11 @@ class PackedSupport:
     src: np.ndarray          # (e_pad,) int32
     dst: np.ndarray          # (e_pad,) int32
     coef: np.ndarray         # (e_pad,) f32
+    # rank-1 stationary-state factors (x_inf = c_inf ⊗ s_inf), padded to
+    # the same buckets — the fused step kernel streams these instead of
+    # the dense x_inf; None unless pack_support got x_inf_factors
+    c_inf: Optional[np.ndarray] = None    # (n_batch,) f32
+    s_inf: Optional[np.ndarray] = None    # (f_pad,) f32
 
     @property
     def n_rb(self) -> int:
@@ -80,9 +87,14 @@ class PackedSupport:
     def shape_key(self, spmm_impl: str = "block_ell") -> tuple:
         """The jit-cache key: exactly the static shapes the compiled
         function specializes on for the given SpMM implementation (the
-        other path's operand shapes must not perturb compile counting)."""
-        if spmm_impl == "block_ell":
-            return ("block_ell", self.n_batch, self.n_pad,
+        other path's operand shapes must not perturb compile counting).
+        ``block_ell`` and ``fused`` consume the same operand set — the
+        fused kernel additionally prefetches `x_inf` (already bucketed to
+        (n_batch, f_pad) here) and the squared threshold (a scalar, no
+        shape) — but they compile different programs, so the impl name
+        stays in the key."""
+        if spmm_impl in ("block_ell", "fused"):
+            return (spmm_impl, self.n_batch, self.n_pad,
                     self.tiles.shape[1], self.x0.shape[1])
         return ("segment", self.n_batch, self.n_pad, self.x0.shape[1],
                 len(self.src))
@@ -109,7 +121,8 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
                  tb_bucket: Optional[int] = None,
                  e_bucket: Optional[int] = None,
                  build_tiles: bool = True,
-                 build_edges: bool = True) -> PackedSupport:
+                 build_edges: bool = True,
+                 x_inf_factors=None) -> PackedSupport:
     """Pack a sampled `Support` (+ its features and per-batch-node
     stationary state) into bucket-padded block-ELL operands.
 
@@ -123,7 +136,13 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
     valid come back with a zero tile budget) — the segment-sum path only
     consumes the edge list, and a dense hub row block can push the tile
     tensor to GBs on large supports. Symmetrically `build_edges=False`
-    skips the bucket-padded edge list the block-ELL path never reads."""
+    skips the bucket-padded edge list the block-ELL path never reads.
+
+    `x_inf_factors=(c, s)` (the rank-1 stationary-state factors, see
+    `repro.gnn.nai.support_stationary_factors`) additionally emits
+    bucket-padded `c_inf` (n_batch,) / `s_inf` (f_pad,) — the fused step
+    kernel's streamed operands. Padding rows/columns get factor zero,
+    matching the zero-padded dense x_inf."""
     if s_bucket and s_bucket % CB:
         raise ValueError(f"s_bucket {s_bucket} not a CB multiple")
     nb, S = sup.n_batch, len(sup)
@@ -172,8 +191,18 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
 
     f_pad = -(-x0.shape[1] // FB) * FB
     x0_p = _pad_rows(np.asarray(x0, np.float32), row_of, n_pad, f_pad)
-    xi_p = np.zeros((nb_bucket, f_pad), np.float32)
+    # a zero-column x_inf means the caller only needs the batch-row count
+    # (fused path: the kernel streams the rank-1 factors instead)
+    xi_p = np.zeros((nb_bucket, f_pad if x_inf.shape[1] else 0), np.float32)
     xi_p[:nb, :x_inf.shape[1]] = x_inf
+
+    c_p = s_p = None
+    if x_inf_factors is not None:
+        c, s = x_inf_factors
+        c_p = np.zeros(nb_bucket, np.float32)
+        c_p[:nb] = np.asarray(c, np.float32)
+        s_p = np.zeros(f_pad, np.float32)
+        s_p[:len(s)] = np.asarray(s, np.float32)
 
     # bucket-padded edge list (segment-sum path): pad with zero-coef
     # self-edges on the last (always padding or hop-max) row
@@ -192,7 +221,8 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
     return PackedSupport(tiles=tiles, tile_col=tile_col, valid=valid,
                          hop_rb=hop_rb, n_batch=nb_bucket, nb_real=nb,
                          n_pad=n_pad, s_real=S, x0=x0_p, x_inf=xi_p,
-                         src=src_p, dst=dst_p, coef=coef_p)
+                         src=src_p, dst=dst_p, coef=coef_p,
+                         c_inf=c_p, s_inf=s_p)
 
 
 def step_active_blocks(hop_rb: np.ndarray, t_max: int) -> np.ndarray:

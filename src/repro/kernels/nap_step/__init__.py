@@ -1,0 +1,6 @@
+from repro.kernels.nap_step.kernel import CB, FB, RB, nap_step_fused
+from repro.kernels.nap_step.ops import fused_step, two_launch_step
+from repro.kernels.nap_step.ref import ref_nap_step
+
+__all__ = ["CB", "FB", "RB", "nap_step_fused", "fused_step",
+           "two_launch_step", "ref_nap_step"]

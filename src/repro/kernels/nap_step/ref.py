@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused NAP step kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.spmm.kernel import RB
+from repro.kernels.spmm.ref import ref_spmm_tiles
+
+
+def ref_nap_step(tiles, tile_col, valid, active, x, c_inf, s_inf,
+                 node_active, ts2):
+    """Two-op reference: predicated tile SpMM, then the exit decision on
+    the batch region against the rank-1 stationary state c ⊗ s. Mirrors
+    nap_step_fused's outputs exactly."""
+    out = ref_spmm_tiles(tiles, tile_col, valid, active, x)
+    x_inf = (c_inf.reshape(-1, 1) * s_inf.reshape(1, -1)).astype(x.dtype)
+    nb = x_inf.shape[0]
+    diff = (out[:nb] - x_inf).astype(jnp.float32)
+    dist2 = jnp.sum(diff * diff, axis=1, keepdims=True)
+    was_active = node_active != 0
+    exits = was_active & (dist2 < jnp.asarray(ts2, jnp.float32).reshape(1))
+    still = was_active & ~exits
+    n_rb = tile_col.shape[0]
+    blk = jnp.zeros((n_rb, 1), jnp.int32).at[:nb // RB, 0].set(
+        still.reshape(-1, RB).any(axis=1).astype(jnp.int32))
+    return out, exits.astype(jnp.int32), blk

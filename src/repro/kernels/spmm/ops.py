@@ -2,9 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

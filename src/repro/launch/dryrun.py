@@ -15,7 +15,6 @@ import argparse
 import json
 import time
 import traceback
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +26,8 @@ from repro.launch.roofline import (active_params, model_flops,
                                    roofline_terms)
 from repro.models import decoder_lm as M
 from repro.nn.params import count_params
-from repro.optim import adamw_init, adamw_update, make_schedule
-from repro.sharding import named, resolve
+from repro.optim import adamw_update, make_schedule
+from repro.sharding import named
 from repro.sharding import spec as logical_spec
 
 

@@ -16,10 +16,9 @@ All values are PER-DEVICE (post-SPMD shapes are per-participant).
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -186,12 +185,15 @@ def _dot_flops(comps: Dict[str, Computation], comp: Computation,
         m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
         contract = 1
         if m:
-            lhs_name = None
-            args = re.findall(r"%?([\w.\-_]+)", op.rest.split(")")[0])
-            if args:
-                lhs_name = args[0]
-            lhs_shape = name_shape.get(lhs_name, "")
-            sm = _SHAPE_RE.search(lhs_shape)
+            operand_region = op.rest.split(")")[0]
+            # newer HLO text inlines operand shapes: dot(f32[64,64]{1,0}
+            # %lhs, ...) — take the first inline shape as the lhs shape,
+            # falling back to the defining op's shape by operand name
+            sm = _SHAPE_RE.search(operand_region)
+            if sm is None:
+                args = re.findall(r"%?([\w.\-_]+)", operand_region)
+                lhs_shape = name_shape.get(args[0], "") if args else ""
+                sm = _SHAPE_RE.search(lhs_shape)
             if sm and m.group(1):
                 dims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
                 for ci in m.group(1).split(","):

@@ -14,13 +14,11 @@ Two modes:
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.common import TrainConfig

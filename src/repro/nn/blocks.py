@@ -13,9 +13,7 @@ apply_layer contract:
 """
 from __future__ import annotations
 
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.nn import attention as attn

@@ -17,6 +17,12 @@ Two serving modes:
   high-water marks, so repeat batches hit the jit compile cache;
   `jit_stats` counts compiles vs hits (alarm on compiles in steady
   state).
+
+Compiled-mode `spmm_impl` selects the propagation operator per step:
+``"segment"`` (jnp segment-sum), ``"block_ell"`` (Pallas SpMM kernel +
+separate jnp exit distance), or ``"fused"`` (one Pallas kernel doing the
+SpMM, the exit distance, and the next step's row-block predicate in a
+single grid pass — no HBM round trip between matmul and distance check).
 """
 from __future__ import annotations
 
@@ -31,7 +37,7 @@ import numpy as np
 from repro.gnn.graph import Graph
 from repro.gnn.models import GNNConfig
 from repro.gnn.nai import (NAIConfig, infer_batch_host, make_compiled_infer,
-                           support_stationary_state)
+                           support_stationary_factors)
 from repro.gnn.packing import next_bucket, pack_support, step_active_blocks
 from repro.gnn.sampler import sample_support
 from repro.kernels.spmm.kernel import RB
@@ -109,16 +115,29 @@ class NAIServingEngine:
         sup = sample_support(g, nodes, nai.t_max, cfg.r)
         nb = sup.n_batch
         x0 = g.features[sup.nodes].astype(np.float32)
-        x_inf = support_stationary_state(g, sup, x0, cfg.r
-                                         ).astype(np.float32)
+        # dense x_inf is built from the f32 factors so the fused kernel
+        # (which streams the factors and multiplies in f32) is
+        # bit-consistent with the dense block_ell/segment distance; in
+        # fused mode the dense matrix is never materialized at all —
+        # a zero-column placeholder carries just the batch-row count
+        c_inf, s_inf = support_stationary_factors(g, sup, x0, cfg.r)
+        c_inf = c_inf.astype(np.float32)
+        s_inf = s_inf.astype(np.float32)
+        if self.spmm_impl == "fused":
+            x_inf = np.zeros((nb, 0), np.float32)
+        else:
+            x_inf = c_inf[:, None] * s_inf[None, :]
 
         nb_bucket = next_bucket(nb, RB)
         hwm = self._bucket_hwm.get(nb_bucket, (0, 0, 0))
         packed = pack_support(sup, x0, x_inf, nb_bucket=nb_bucket,
                               s_bucket=hwm[0], tb_bucket=hwm[1],
                               e_bucket=hwm[2],
-                              build_tiles=self.spmm_impl == "block_ell",
-                              build_edges=self.spmm_impl == "segment")
+                              build_tiles=self.spmm_impl in ("block_ell",
+                                                             "fused"),
+                              build_edges=self.spmm_impl == "segment",
+                              x_inf_factors=(c_inf, s_inf)
+                              if self.spmm_impl == "fused" else None)
         self._bucket_hwm[nb_bucket] = (
             max(hwm[0], packed.n_pad), max(hwm[1], packed.tiles.shape[1]),
             max(hwm[2], len(packed.src)))
@@ -130,7 +149,7 @@ class NAIServingEngine:
             self._seen_keys.add(key)
             self.jit_stats["compiles"] += 1
 
-        if self.spmm_impl == "block_ell":
+        if self.spmm_impl in ("block_ell", "fused"):
             operands = {
                 "tiles": jnp.asarray(packed.tiles),
                 "tile_col": jnp.asarray(packed.tile_col),
@@ -138,6 +157,9 @@ class NAIServingEngine:
                 "step_active": jnp.asarray(
                     step_active_blocks(packed.hop_rb, nai.t_max)),
             }
+            if self.spmm_impl == "fused":
+                operands["c_inf"] = jnp.asarray(packed.c_inf)
+                operands["s_inf"] = jnp.asarray(packed.s_inf)
         else:
             operands = {"src": jnp.asarray(packed.src),
                         "dst": jnp.asarray(packed.dst),

@@ -4,8 +4,6 @@ import os
 import subprocess
 import sys
 
-import numpy as np
-import pytest
 
 SCRIPT = r"""
 import os
@@ -17,13 +15,13 @@ from repro.gnn import load_dataset, propagated_series
 from repro.gnn.distributed import (distributed_nap_distances,
                                    distributed_series, partition_graph)
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+# jax 0.4.x: no axis_types / set_mesh — the helpers take the mesh
+# explicitly, so no ambient-mesh context is needed
+mesh = jax.make_mesh((4, 2), ("data", "model"))
 g = load_dataset("pubmed-like", scale=0.02, seed=0)
 k = 3
 host = propagated_series(g, g.features, k)
-with jax.sharding.set_mesh(mesh):
-    dist = distributed_series(mesh, g, k)
+dist = distributed_series(mesh, g, k)
 for l in range(k + 1):
     d = np.asarray(dist[l])[:g.n]
     err = np.abs(d - host[l]).max()
@@ -32,8 +30,7 @@ for l in range(k + 1):
 # NAP distance helper agrees with numpy
 x = np.asarray(dist[k])
 xi = np.zeros_like(x)
-with jax.sharding.set_mesh(mesh):
-    dd = np.asarray(distributed_nap_distances(mesh, jnp.asarray(x), jnp.asarray(xi)))
+dd = np.asarray(distributed_nap_distances(mesh, jnp.asarray(x), jnp.asarray(xi)))
 ref = np.linalg.norm(x, axis=1)
 assert np.abs(dd - ref).max() < 2e-2, np.abs(dd - ref).max()
 print("DISTRIBUTED_OK")

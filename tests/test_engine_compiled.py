@@ -64,6 +64,30 @@ def test_compiled_matches_host(setup):
         assert np.abs(d - nai.t_s).min() > 1e-3
 
 
+def test_fused_impl_matches_host_and_block_ell(setup):
+    """spmm_impl='fused' (one Pallas kernel per NAP step) must reproduce
+    the host path AND be bit-identical to block_ell on exit orders (both
+    compiled impls share the f32 stationary-state arithmetic)."""
+    g, cfg, params, nai = setup
+    host = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0)
+    bell = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                            mode="compiled", spmm_impl="block_ell")
+    fused = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                             mode="compiled", spmm_impl="fused")
+    rng = np.random.default_rng(2)
+    for trial in range(2):
+        nodes = rng.choice(g.test_idx, size=32, replace=False)
+        ph, oh = _serve(host, nodes)
+        pb, ob = _serve(bell, nodes)
+        pf, of = _serve(fused, nodes)
+        np.testing.assert_array_equal(pf, ph)
+        np.testing.assert_array_equal(of, oh)
+        np.testing.assert_array_equal(pf, pb)
+        np.testing.assert_array_equal(of, ob)
+    # repeat batches hit the jit cache exactly like the other impls
+    assert fused.jit_stats["compiles"] >= 1
+
+
 def test_same_bucket_batch_hits_jit_cache(setup):
     g, cfg, params, nai = setup
     comp = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,

@@ -4,11 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.gnn import (GNNConfig, NAIConfig, accuracy, infer_all,
-                       load_dataset, order_distribution, propagated_series,
+from repro.gnn import (GNNConfig, NAIConfig, infer_all, load_dataset,
+                       order_distribution, propagated_series,
                        stationary_weights)
 from repro.gnn.graph import Graph, add_self_loops, edge_coefficients, spmm
-from repro.gnn.nai import infer_batch_host
 from repro.gnn.sampler import sample_support
 
 

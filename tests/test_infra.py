@@ -1,11 +1,9 @@
 """Checkpoint round-trip, data pipeline, serving engine, schedules,
 HLO analyzer, adaptive-depth decode."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.common import AdaptiveDepthConfig, TrainConfig

@@ -1,6 +1,5 @@
 """Pallas kernel validation vs the pure-jnp oracles (interpret=True): shape
 and dtype sweeps per kernel (deliverable c)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -6,7 +6,7 @@ import pytest
 
 from repro.common import ModelConfig
 from repro.nn import basic, attention as A
-from repro.nn.params import ParamDef, init_tree
+from repro.nn.params import init_tree
 from repro.nn.moe import apply_moe, moe_defs
 
 CFG = ModelConfig(name="t", arch_type="dense", d_model=64, num_heads=4,
