@@ -17,7 +17,7 @@ def main() -> None:
                     help="smaller datasets, fewer epochs")
     ap.add_argument("--only", default="",
                     help="comma list: table3,table5,table6,table7,fig2,fig3,"
-                         "roofline,kernels,ablation")
+                         "roofline,kernels,ablation,serving")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -57,6 +57,9 @@ def main() -> None:
     if only is None or "ablation" in only:
         from benchmarks.ablation_batch import run as ab
         suites.append(("ablation", ab))
+    if only is None or "serving" in only:
+        from benchmarks.serving_bench import run as sb
+        suites.append(("serving", sb))
 
     print("name,us_per_call,derived")
     failures = 0

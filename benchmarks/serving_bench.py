@@ -1,0 +1,311 @@
+"""Serving throughput benchmark: requests/sec and latency percentiles for
+the NAI serving engine across every serving configuration — host vs
+compiled × {segment, block_ell, fused} × {serial, pipelined} — plus the
+per-batch host-stage vs device-stage time breakdown and the structural
+counters the pipelined refactor is accountable for.
+
+Interpret-mode Pallas timings on CPU are emulation, not TPU performance;
+the structural columns carry the backend-independent signal:
+
+* ``series_rows`` — rows written to the per-step NAP series carry. The
+  batch-row carry (PR 3) stores ``nb_pad`` rows instead of the full
+  padded support (``support_rows``); with T_max-hop supports that is the
+  difference between S·f and nb·f of HBM series traffic per step.
+* ``steady_compiles`` — jit compiles observed during the timed pass
+  (must be 0: bucketed repeat batches hit the compile cache; the
+  batch-row carry must not add a shape axis that defeats bucketing).
+* ``steady_pack_allocs`` — bucket-sized numpy allocations during the
+  timed pass (must be 0: the engine packs into a rotating pool of
+  preallocated buffer sets).
+
+Runnable standalone::
+
+    PYTHONPATH=src python -m benchmarks.serving_bench [--smoke] [--check]
+                                                      [--out F]
+
+writes ``BENCH_serving.json`` (``BENCH_serving_smoke.json`` with
+``--smoke``) so the serving trajectory accumulates across commits.
+``--check`` exits nonzero when a structural counter regresses — the CI
+guard.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+if __package__ in (None, ""):      # `python benchmarks/serving_bench.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [_root, os.path.join(_root, "src")]
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.gnn import GNNConfig, init_classifiers, load_dataset
+from repro.gnn.nai import (NAIConfig, infer_batch_masked,
+                           support_stationary_factors)
+from repro.gnn.packing import next_bucket, pack_support, step_active_blocks
+from repro.gnn.sampler import sample_support
+from repro.kernels.spmm.kernel import RB
+from repro.serving import NAIServingEngine
+
+
+def _setup(smoke: bool):
+    """The default serving shape: pubmed-like graph, one FB feature
+    block (keeps interpret-mode Pallas a benchmark, not a soak), random
+    classifier weights (throughput does not depend on trained values)."""
+    g = load_dataset("pubmed-like", scale=0.02 if smoke else 0.05, seed=0)
+    g = dataclasses.replace(
+        g, features=np.ascontiguousarray(g.features[:, :64]))
+    cfg = GNNConfig("sgc", 64, g.num_classes, k=2, hidden=32, mlp_layers=2)
+    params = {"cls": init_classifiers(cfg, jax.random.PRNGKey(0))}
+    nai = NAIConfig(t_s=6.0, t_min=1, t_max=2,
+                    batch_size=32 if smoke else 64)
+    return g, cfg, params, nai
+
+
+def _request_stream(g, nai, n_batches: int, seed: int = 0):
+    """Ragged batch sizes inside one bucket — the steady-state pattern a
+    deployment sees (full batches with occasional stragglers)."""
+    rng = np.random.default_rng(seed)
+    bs = nai.batch_size
+    sizes = [bs if i % 3 else max(bs - rng.integers(0, bs // 8), 1)
+             for i in range(n_batches)]
+    return [rng.choice(g.test_idx, size=s, replace=False) for s in sizes]
+
+
+def _drain(engine, stream) -> float:
+    """Submit+serve the stream, return wall seconds for the whole drain
+    (including the pipeline flush)."""
+    t0 = time.perf_counter()
+    for nodes in stream:
+        engine.submit(nodes)
+        engine.step()
+    engine.flush()
+    return time.perf_counter() - t0
+
+
+def _bench_configs(g, cfg, params, nai, specs, stream,
+                   rounds: int) -> List[Dict]:
+    """Warm every engine, then INTERLEAVE the timed rounds (all configs
+    per round, best round per config) so machine drift during the run
+    hits every configuration equally instead of whichever happened to be
+    measured in a contended window."""
+    from repro.serving.engine import EngineStats, LatencyRing
+    engines, baselines = [], []
+    for mode, impl, depth in specs:
+        kw = dict(max_wait_s=10.0, mode=mode)
+        if mode == "compiled":
+            kw.update(spmm_impl=impl, pipeline_depth=depth)
+        eng = NAIServingEngine(cfg, nai, params, g, **kw)
+        _drain(eng, stream)               # warm 1: compiles, HWM growth
+        _drain(eng, stream)               # warm 2: pack pool converges
+        engines.append(eng)
+        baselines.append((eng.jit_stats["compiles"],
+                          eng.pack_stats["allocs"]))
+    best = [dict(wall=float("inf")) for _ in specs]
+    for _ in range(rounds):
+        for i, eng in enumerate(engines):
+            eng.stats = EngineStats(latencies=LatencyRing(16384))
+            eng.batch_timings.clear()
+            wall = _drain(eng, stream)
+            if wall < best[i]["wall"]:
+                best[i] = dict(wall=wall, served=eng.stats.served,
+                               summary=eng.stats.summary(),
+                               timings=list(eng.batch_timings))
+    rows = []
+    for (mode, impl, depth), eng, (c0, a0), b in zip(
+            specs, engines, baselines, best):
+        row = {
+            "mode": mode, "impl": impl if mode == "compiled" else "-",
+            "pipeline_depth": depth,
+            "req_per_s": round(b["served"] / b["wall"], 1),
+            "p50_ms": round(b["summary"]["p50_ms"], 3),
+            "p95_ms": round(b["summary"]["p95_ms"], 3),
+            "p99_ms": round(b["summary"]["p99_ms"], 3),
+            "steady_compiles": eng.jit_stats["compiles"] - c0,
+            "steady_pack_allocs": eng.pack_stats["allocs"] - a0,
+        }
+        if mode == "compiled" and b["timings"]:
+            for k, label in (("host_s", "host_stage_ms"),
+                             ("dispatch_s", "dispatch_ms"),
+                             ("sync_s", "device_sync_ms")):
+                row[label] = round(
+                    1e3 * float(np.mean([t[k] for t in b["timings"]])), 3)
+        rows.append(row)
+    return rows
+
+
+def _series_structural(g, cfg, nai, stream) -> Dict:
+    """Measure — not assume — the series-carry shape on the default
+    serving shape: pack one stream batch and run the masked NAP core
+    directly; the carry's row count is what the jitted loop writes to
+    HBM per step (valid under interpret mode: shapes are shapes)."""
+    nodes = stream[0]
+    sup = sample_support(g, nodes, nai.t_max, cfg.r)
+    x0 = g.features[sup.nodes].astype(np.float32)
+    c, s = support_stationary_factors(g, sup, x0, cfg.r)
+    x_inf = (c[:, None] * s[None, :]).astype(np.float32)
+    packed = pack_support(sup, x0, x_inf,
+                          nb_bucket=next_bucket(sup.n_batch, RB))
+    sa = step_active_blocks(packed.hop_rb, nai.t_max)
+    _, series = infer_batch_masked(
+        cfg, nai, None, None, None, None, jnp.asarray(packed.x0),
+        jnp.asarray(packed.x_inf), packed.n_batch, spmm_impl="block_ell",
+        ell=(jnp.asarray(packed.tiles), jnp.asarray(packed.tile_col),
+             jnp.asarray(packed.valid)),
+        step_active=jnp.asarray(sa), interpret=True)
+    return {
+        "series_rows": int(series.shape[1]),
+        "nb_pad": int(packed.n_batch),
+        "support_rows": int(packed.n_pad),
+        "series_rows_saving": round(
+            1.0 - series.shape[1] / packed.n_pad, 3),
+        "steps": int(series.shape[0] - 1),
+    }
+
+
+def collect(smoke: bool = False) -> Dict:
+    g, cfg, params, nai = _setup(smoke)
+    n_batches = 4 if smoke else 8
+    rounds = 2 if smoke else 3
+    stream = _request_stream(g, nai, n_batches)
+    specs = [("host", "-", 1)]
+    for impl in ("segment", "block_ell", "fused"):
+        for depth in (1, 2):
+            specs.append(("compiled", impl, depth))
+    configs = _bench_configs(g, cfg, params, nai, specs, stream, rounds)
+    speedups = {}
+    for impl in ("segment", "block_ell", "fused"):
+        ser = next(c for c in configs if c["impl"] == impl
+                   and c["pipeline_depth"] == 1)
+        pip = next(c for c in configs if c["impl"] == impl
+                   and c["pipeline_depth"] == 2)
+        speedups[impl] = round(pip["req_per_s"] / ser["req_per_s"], 3)
+    # the acceptance comparison pins the impl whose device timing is real
+    # on this backend: on CPU the Pallas impls run interpret-mode
+    # EMULATION on the same cores as the host stage (nothing to overlap,
+    # ~0.5% potential gain under ±% noise), so segment — actual async XLA
+    # CPU compute — is the meaningful serial-vs-pipelined comparison; on
+    # an accelerator the engine default block_ell is.
+    d_impl = "segment" if jax.default_backend() == "cpu" else "block_ell"
+    d_ser = next(c for c in configs if c["impl"] == d_impl
+                 and c["pipeline_depth"] == 1)
+    d_pip = next(c for c in configs if c["impl"] == d_impl
+                 and c["pipeline_depth"] == 2)
+    default_cmp = {
+        "impl": d_impl,
+        "serial_req_per_s": d_ser["req_per_s"],
+        "pipelined_req_per_s": d_pip["req_per_s"],
+        "pipelined_ge_serial": d_pip["req_per_s"] >= d_ser["req_per_s"],
+    }
+    return {
+        "bench": "serving_bench",
+        "smoke": bool(smoke),
+        "unix_time": time.time(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "shape": {"batch_size": nai.batch_size, "t_max": nai.t_max,
+                  "feat": 64, "n_batches": n_batches},
+        "structural": _series_structural(g, cfg, nai, stream),
+        "pipelined_speedup": speedups,
+        "default_shape_comparison": default_cmp,
+        "configs": configs,
+    }
+
+
+def check(payload: Dict) -> List[str]:
+    """Structural regressions that must fail CI (timing-independent)."""
+    errs = []
+    st = payload["structural"]
+    if st["series_rows"] > st["nb_pad"]:
+        errs.append(f"series carry stores {st['series_rows']} rows > "
+                    f"nb_pad {st['nb_pad']} (batch-row carry regressed)")
+    for c in payload["configs"]:
+        if c["mode"] != "compiled":
+            continue
+        tag = f"{c['impl']}/depth{c['pipeline_depth']}"
+        if c["steady_compiles"] > 0:
+            errs.append(f"{tag}: {c['steady_compiles']} jit compiles in "
+                        f"steady state (bucketing defeated)")
+        if c["steady_pack_allocs"] > 0:
+            errs.append(f"{tag}: {c['steady_pack_allocs']} bucket-sized "
+                        f"pack allocations in steady state")
+    return errs
+
+
+def _rows(payload: Dict) -> List[str]:
+    rows = []
+    for c in payload["configs"]:
+        name = (f"serving/{c['mode']}" +
+                (f"/{c['impl']}/depth{c['pipeline_depth']}"
+                 if c["mode"] == "compiled" else ""))
+        us = 1e6 / max(c["req_per_s"], 1e-9)
+        derived = (f"req_per_s={c['req_per_s']};p50_ms={c['p50_ms']};"
+                   f"p95_ms={c['p95_ms']};p99_ms={c['p99_ms']};"
+                   f"steady_compiles={c['steady_compiles']}")
+        if "host_stage_ms" in c:
+            derived += (f";host_stage_ms={c['host_stage_ms']};"
+                        f"dispatch_ms={c['dispatch_ms']};"
+                        f"device_sync_ms={c['device_sync_ms']}")
+        rows.append(csv_row(name, us, derived))
+    st = payload["structural"]
+    rows.append(csv_row(
+        "serving/structural/series_carry", 0.0,
+        f"series_rows={st['series_rows']};nb_pad={st['nb_pad']};"
+        f"support_rows={st['support_rows']};"
+        f"series_rows_saving={st['series_rows_saving']}"))
+    return rows
+
+
+def run() -> list:
+    return _rows(collect(smoke=True))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few rounds (CI smoke job)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero on structural counter regression")
+    ap.add_argument("--out", default="",
+                    help="JSON output path (default BENCH_serving.json, "
+                         "or BENCH_serving_smoke.json with --smoke)")
+    args = ap.parse_args()
+    out_path = args.out or ("BENCH_serving_smoke.json" if args.smoke
+                            else "BENCH_serving.json")
+    payload = collect(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for r in _rows(payload):
+        print(r, flush=True)
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    print(f"# wrote {out_path}")
+    # timing-dependent, so advisory only (never a CI failure: a contended
+    # runner can flip a few-percent comparison) — the committed
+    # full-size BENCH_serving.json is the record of the pipelining win
+    cmp_ = payload["default_shape_comparison"]
+    if not cmp_["pipelined_ge_serial"]:
+        print(f"WARNING: pipelined < serial req/s on the default shape "
+              f"({cmp_['impl']}: {cmp_['pipelined_req_per_s']} vs "
+              f"{cmp_['serial_req_per_s']}) — noise on this run?",
+              file=sys.stderr)
+    if args.check:
+        errs = check(payload)
+        for e in errs:
+            print(f"STRUCTURAL REGRESSION: {e}", file=sys.stderr)
+        if errs:
+            sys.exit(1)
+        print("# structural counters OK (series_rows <= nb_pad, "
+              "0 steady-state compiles/allocs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ Two execution paths:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, Optional, Tuple
 
@@ -92,16 +93,19 @@ def _needed_mask(sup: Support, active_batch: np.ndarray, remaining_hops: int
     S = len(sup)
     dist = np.full(S, np.iinfo(np.int32).max, np.int32)
     dist[:sup.n_batch][active_batch] = 0
-    frontier = np.flatnonzero(dist == 0)
-    # reverse BFS over subgraph edges (dst -> src one hop per level)
+    in_frontier = np.zeros(S, bool)
+    in_frontier[:sup.n_batch][active_batch] = True
+    # reverse BFS over subgraph edges (dst -> src one hop per level); the
+    # per-hop edge filter is an O(E) boolean gather over support ids, not
+    # an np.isin merge-scan against the frontier list
     for h in range(1, remaining_hops + 1):
-        if len(frontier) == 0:
+        if not in_frontier.any():
             break
-        m = np.isin(sup.dst, frontier)
-        cand = sup.src[m]
+        cand = sup.src[in_frontier[sup.dst]]
         new = cand[dist[cand] > h]
         dist[new] = h
-        frontier = np.unique(new)
+        in_frontier[:] = False
+        in_frontier[new] = True
     return dist <= remaining_hops
 
 
@@ -206,7 +210,13 @@ def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
                        interpret: bool = True):
     """Compiled NAP: fori over orders with exit masks (static shapes).
 
-    Returns (exit_order (nb,), stacked features (T_max+1, S, f)).
+    Returns (exit_order (nb,), stacked BATCH-ROW features
+    (T_max+1, n_batch, f)). The propagation state stays (S, f) inside the
+    loop — every support row keeps propagating — but the per-step history
+    written to the carry holds only the batch region: classification
+    (`make_compiled_infer`) never reads support rows, and with T_max-hop
+    supports S is routinely 10–50× n_batch, so carrying S rows per step
+    was almost entirely dead HBM traffic.
 
     `spmm_impl` selects the propagation operator:
 
@@ -270,13 +280,14 @@ def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
             x, exits, blk_still = nap_step_fused(
                 tiles, tile_col, valid, active, x, c_inf, s_inf, nact,
                 ts2, interpret=interpret)
-            series = series.at[l].set(x)
+            series = series.at[l].set(x[:n_batch])
             exit_order = jnp.where(exits[:, 0] != 0, l, exit_order)
             # the kernel already emitted next step's dynamic predicate
             live = jnp.any(blk_still != 0).astype(jnp.int32)
             return x, series, exit_order, live
 
-        series = jnp.zeros((tmax + 1, S, f), x0.dtype).at[0].set(x0)
+        series = jnp.zeros((tmax + 1, n_batch, f),
+                           x0.dtype).at[0].set(x0[:n_batch])
         exit_order = jnp.zeros((n_batch,), jnp.int32)
         _, series, exit_order, _ = jax.lax.fori_loop(
             1, tmax + 1, body, (x0, series, exit_order, jnp.int32(1)))
@@ -303,7 +314,7 @@ def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
         x, series, exit_order = carry
         live = jnp.any(exit_order == 0).astype(jnp.int32)
         x = spmm(x, l, live)
-        series = series.at[l].set(x)
+        series = series.at[l].set(x[:n_batch])
         # squared comparison (not norm < t_s): the same arithmetic the
         # fused kernel uses, so exit orders stay bit-consistent across
         # the compiled impls even for distances at the threshold
@@ -313,7 +324,8 @@ def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
         exit_order = jnp.where(can_exit, l, exit_order)
         return x, series, exit_order
 
-    series = jnp.zeros((tmax + 1, S, f), x0.dtype).at[0].set(x0)
+    series = jnp.zeros((tmax + 1, n_batch, f),
+                       x0.dtype).at[0].set(x0[:n_batch])
     exit_order = jnp.zeros((n_batch,), jnp.int32)
     _, series, exit_order = jax.lax.fori_loop(
         1, tmax + 1, body, (x0, series, exit_order))
@@ -323,7 +335,8 @@ def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
 
 def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
                         spmm_impl: str = "block_ell",
-                        interpret: bool = True):
+                        interpret: bool = True,
+                        donate: Optional[bool] = None):
     """One jitted function: masked NAP propagation + per-order
     classification (unrolled over orders, selected by exit mask).
 
@@ -336,12 +349,23 @@ def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
     operand shapes (repro.gnn.packing) so repeat batches hit it. The
     number of traced shapes is exposed via the jitted function's
     ``_cache_size()``.
+
+    `donate` hands the per-batch operands (``operands``, ``x0``,
+    ``x_inf`` — NOT the classifier params, which persist across batches)
+    to XLA as donated buffers, so bucketed repeat batches overwrite the
+    previous batch's HBM allocations instead of growing the footprint.
+    Default (None) enables donation everywhere except the CPU backend,
+    which does not implement donation and would warn per compile. The
+    effective donated argnums are exposed as ``run._donate_argnums``.
     """
     if spmm_impl not in ("segment", "block_ell", "fused"):
         raise ValueError(f"unknown spmm_impl {spmm_impl!r}")
     tmax = nai.t_max
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    donate_argnums = (1, 2, 3) if donate else ()
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=donate_argnums)
     def run(cls_params, operands, x0, x_inf):
         nb = x_inf.shape[0]
         if spmm_impl in ("block_ell", "fused"):
@@ -360,10 +384,12 @@ def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
                 operands["coef"], x0, x_inf, nb, spmm_impl="segment")
         preds = jnp.zeros((nb,), jnp.int32)
         for l in range(1, tmax + 1):
-            feats = series[:l + 1, :nb, :cfg.feat_dim]
+            # series already carries batch rows only (nb == series.shape[1])
+            feats = series[:l + 1, :, :cfg.feat_dim]
             z = apply_classifier(cfg, cls_params[l], feats, l)
             preds = jnp.where(exit_order == l,
                               jnp.argmax(z, -1).astype(jnp.int32), preds)
         return preds, exit_order
 
+    run._donate_argnums = donate_argnums
     return run

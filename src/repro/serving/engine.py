@@ -10,19 +10,44 @@ Two serving modes:
 
 * ``mode="host"`` — the faithful numpy path (`infer_batch_host`), with
   real frontier shrinking and MAC accounting.
-* ``mode="compiled"`` — the end-to-end compiled path: vectorized support
-  sampling -> bucket-padded block-ELL packing (repro.gnn.packing) -> one
-  jitted function doing Pallas-SpMM masked NAP plus per-order
-  classification. Operand shapes are bucketed and held at per-batch-size
-  high-water marks, so repeat batches hit the jit compile cache;
-  `jit_stats` counts compiles vs hits (alarm on compiles in steady
-  state).
+* ``mode="compiled"`` — the end-to-end compiled path, structured as an
+  explicit two-stage software pipeline:
+
+  - **host stage** (`_host_stage`): vectorized support sampling ->
+    bucket-padded block-ELL packing into a rotating pool of preallocated
+    buffer sets (`pack_support(out=...)`), so the steady state allocates
+    no fresh bucket-sized numpy arrays;
+  - **device stage** (`_device_stage`): operand transfer plus ONE jitted
+    function (Pallas-SpMM masked NAP + per-order classification),
+    dispatched asynchronously — the call returns device futures without
+    blocking.
+
+  With ``pipeline_depth=1`` the two stages run back to back per batch
+  (serial serving, the pre-pipeline behavior). With ``pipeline_depth=2``
+  the engine keeps one batch in flight: batch N+1's sampling/packing
+  (host stage) overlaps batch N's device compute, and batch N's results
+  are only synced (`np.asarray`) once batch N+1 has been submitted.
+  `step()` then returns the *previous* batch's completed requests (and
+  `[]` while the pipe fills); `flush()` drains what remains in flight.
+  Completion order stays FIFO, so predictions/exit orders are identical
+  to serial serving on the same request stream.
+
+  Operand shapes are bucketed and held at per-batch-size high-water
+  marks, so repeat batches hit the jit compile cache; `jit_stats` counts
+  compiles vs hits (alarm on compiles in steady state) and `pack_stats`
+  counts pooled-buffer reuses vs allocations (steady state allocates
+  zero). The pool rotates ``pipeline_depth + 1`` buffer sets per batch
+  bucket, so a buffer refilled by the host stage is never one an
+  in-flight batch still reads.
 
 Compiled-mode `spmm_impl` selects the propagation operator per step:
 ``"segment"`` (jnp segment-sum), ``"block_ell"`` (Pallas SpMM kernel +
 separate jnp exit distance), or ``"fused"`` (one Pallas kernel doing the
 SpMM, the exit distance, and the next step's row-block predicate in a
 single grid pass — no HBM round trip between matmul and distance check).
+The jitted runner donates its per-batch operand buffers on backends that
+implement donation (see `make_compiled_infer`), so bucketed repeat
+batches reuse HBM instead of growing the footprint.
 """
 from __future__ import annotations
 
@@ -38,7 +63,8 @@ from repro.gnn.graph import Graph
 from repro.gnn.models import GNNConfig
 from repro.gnn.nai import (NAIConfig, infer_batch_host, make_compiled_infer,
                            support_stationary_factors)
-from repro.gnn.packing import next_bucket, pack_support, step_active_blocks
+from repro.gnn.packing import (PackedSupport, next_bucket, pack_support,
+                               step_active_blocks)
 from repro.gnn.sampler import sample_support
 from repro.kernels.spmm.kernel import RB
 
@@ -52,15 +78,50 @@ class Request:
     exit_order: int = -1
 
 
+class LatencyRing:
+    """Fixed-capacity ring of the most recent request latencies.
+
+    Long-running engines append one latency per request forever; an
+    unbounded list is a slow memory leak. The ring keeps the latest
+    `capacity` samples — enough for stable p50/p95/p99 — at constant
+    memory. For short runs (fewer than `capacity` appends) percentiles
+    are computed over exactly the same samples an unbounded list would
+    hold, so `EngineStats.summary()` is unchanged there.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._buf = np.zeros(capacity, np.float64)
+        self.total_appended = 0
+
+    def append(self, value: float) -> None:
+        self._buf[self.total_appended % self.capacity] = value
+        self.total_appended += 1
+
+    def __len__(self) -> int:
+        return min(self.total_appended, self.capacity)
+
+    def values(self) -> np.ndarray:
+        """Current window (order not meaningful once the ring has
+        wrapped; percentiles don't care)."""
+        return self._buf[:len(self)].copy()
+
+    def __iter__(self):
+        return iter(self.values())
+
+
 @dataclasses.dataclass
 class EngineStats:
     served: int = 0
     batches: int = 0
-    latencies: List[float] = dataclasses.field(default_factory=list)
+    latencies: LatencyRing = dataclasses.field(default_factory=LatencyRing)
     exit_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     def percentile(self, q: float) -> float:
-        return float(np.percentile(self.latencies, q)) if self.latencies else 0.0
+        vals = self.latencies.values()
+        return float(np.percentile(vals, q)) if len(vals) else 0.0
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -75,12 +136,32 @@ class EngineStats:
         }
 
 
+@dataclasses.dataclass
+class _Inflight:
+    """One submitted batch whose device results have not been synced."""
+    requests: List[Request]
+    inv: np.ndarray          # dedupe inverse map (batch -> unique row)
+    nb_real: int             # unique node count (real rows of the result)
+    preds_dev: object        # device array futures from the jitted runner
+    orders_dev: object
+    host_s: float            # sample + pack wall time
+    dispatch_s: float        # operand transfer + async dispatch wall time
+
+
 class NAIServingEngine:
     def __init__(self, cfg: GNNConfig, nai: NAIConfig, params, graph: Graph,
                  *, max_wait_s: float = 0.01, mode: str = "host",
-                 spmm_impl: str = "block_ell", interpret: bool = True):
+                 spmm_impl: str = "block_ell", interpret: bool = True,
+                 pipeline_depth: int = 1, donate: Optional[bool] = None,
+                 latency_window: int = 4096):
         if mode not in ("host", "compiled"):
             raise ValueError(f"unknown mode {mode!r}")
+        if pipeline_depth < 1:
+            raise ValueError(f"pipeline_depth must be >= 1, got "
+                             f"{pipeline_depth}")
+        if pipeline_depth > 1 and mode != "compiled":
+            raise ValueError("pipelining overlaps host pack with device "
+                             "compute; mode='host' has no device stage")
         self.cfg = cfg
         self.nai = nai
         self.params = params
@@ -88,17 +169,26 @@ class NAIServingEngine:
         self.max_wait_s = max_wait_s
         self.mode = mode
         self.spmm_impl = spmm_impl
+        self.pipeline_depth = pipeline_depth
         self.queue: Deque[Request] = deque()
-        self.stats = EngineStats()
+        self.stats = EngineStats(latencies=LatencyRing(latency_window))
         # compiled-path state: jitted runner + bucket high-water marks
         # keyed by padded batch size -> (s_bucket, tb_bucket, e_bucket)
         self.jit_stats: Dict[str, int] = {"compiles": 0, "hits": 0}
+        self.pack_stats: Dict[str, int] = {"allocs": 0, "reuses": 0}
+        # per-batch stage breakdown (host/dispatch/sync seconds), bounded
+        self.batch_timings: Deque[Dict[str, float]] = deque(maxlen=1024)
         self._runner = None
         self._bucket_hwm: Dict[int, Tuple[int, int, int]] = {}
         self._seen_keys: set = set()
+        self._inflight: Deque[_Inflight] = deque()
+        # rotating pack-buffer pool: bucket -> pipeline_depth + 1 slots
+        self._pack_pool: Dict[int, List[Optional[PackedSupport]]] = {}
+        self._pool_idx: Dict[int, int] = {}
         if mode == "compiled":
             self._runner = make_compiled_infer(
-                cfg, nai, spmm_impl=spmm_impl, interpret=interpret)
+                cfg, nai, spmm_impl=spmm_impl, interpret=interpret,
+                donate=donate)
             self._cls_params = {
                 l: {k: jnp.asarray(v) for k, v in p.items()}
                 for l, p in params["cls"].items()}
@@ -107,10 +197,20 @@ class NAIServingEngine:
         """Shapes traced by the compiled runner (0 in host mode)."""
         return self._runner._cache_size() if self._runner is not None else 0
 
-    def _infer_compiled(self, nodes: np.ndarray
-                        ) -> Tuple[np.ndarray, np.ndarray]:
-        """Vectorized sample -> block-ELL pack -> jitted masked NAI +
-        classification. `nodes` must be duplicate-free."""
+    @property
+    def donate_argnums(self) -> tuple:
+        """Argnums the jitted runner donates (empty in host mode or on
+        backends without donation support)."""
+        return (self._runner._donate_argnums
+                if self._runner is not None else ())
+
+    # ------------------------------------------------------- host stage
+    def _host_stage(self, nodes: np.ndarray
+                    ) -> Tuple[PackedSupport, Optional[np.ndarray]]:
+        """Sample the support and pack it into a pooled buffer set,
+        plus the static per-step row-block predicate for the Pallas
+        impls. `nodes` must be duplicate-free. Pure host work — no jax
+        calls."""
         g, cfg, nai = self.graph, self.cfg, self.nai
         sup = sample_support(g, nodes, nai.t_max, cfg.r)
         nb = sup.n_batch
@@ -130,6 +230,9 @@ class NAIServingEngine:
 
         nb_bucket = next_bucket(nb, RB)
         hwm = self._bucket_hwm.get(nb_bucket, (0, 0, 0))
+        slots = self._pack_pool.setdefault(
+            nb_bucket, [None] * (self.pipeline_depth + 1))
+        idx = self._pool_idx.get(nb_bucket, 0)
         packed = pack_support(sup, x0, x_inf, nb_bucket=nb_bucket,
                               s_bucket=hwm[0], tb_bucket=hwm[1],
                               e_bucket=hwm[2],
@@ -137,7 +240,11 @@ class NAIServingEngine:
                                                              "fused"),
                               build_edges=self.spmm_impl == "segment",
                               x_inf_factors=(c_inf, s_inf)
-                              if self.spmm_impl == "fused" else None)
+                              if self.spmm_impl == "fused" else None,
+                              out=slots[idx])
+        slots[idx] = packed
+        self._pool_idx[nb_bucket] = (idx + 1) % len(slots)
+        self.pack_stats["reuses" if packed.reused else "allocs"] += 1
         self._bucket_hwm[nb_bucket] = (
             max(hwm[0], packed.n_pad), max(hwm[1], packed.tiles.shape[1]),
             max(hwm[2], len(packed.src)))
@@ -148,14 +255,24 @@ class NAIServingEngine:
         else:
             self._seen_keys.add(key)
             self.jit_stats["compiles"] += 1
+        step_active = (step_active_blocks(packed.hop_rb, nai.t_max)
+                       if self.spmm_impl in ("block_ell", "fused")
+                       else None)
+        return packed, step_active
 
+    # ----------------------------------------------------- device stage
+    def _device_stage(self, packed: PackedSupport,
+                      step_active: Optional[np.ndarray]):
+        """Transfer operands and dispatch the jitted runner. Returns
+        device futures (predictions, exit orders) WITHOUT blocking —
+        jax dispatch is asynchronous, so host work for the next batch can
+        proceed while the device computes."""
         if self.spmm_impl in ("block_ell", "fused"):
             operands = {
                 "tiles": jnp.asarray(packed.tiles),
                 "tile_col": jnp.asarray(packed.tile_col),
                 "valid": jnp.asarray(packed.valid),
-                "step_active": jnp.asarray(
-                    step_active_blocks(packed.hop_rb, nai.t_max)),
+                "step_active": jnp.asarray(step_active),
             }
             if self.spmm_impl == "fused":
                 operands["c_inf"] = jnp.asarray(packed.c_inf)
@@ -164,11 +281,36 @@ class NAIServingEngine:
             operands = {"src": jnp.asarray(packed.src),
                         "dst": jnp.asarray(packed.dst),
                         "coef": jnp.asarray(packed.coef)}
-        preds, orders = self._runner(self._cls_params, operands,
-                                     jnp.asarray(packed.x0),
-                                     jnp.asarray(packed.x_inf))
-        return (np.asarray(preds)[:packed.nb_real],
-                np.asarray(orders)[:packed.nb_real])
+        return self._runner(self._cls_params, operands,
+                            jnp.asarray(packed.x0),
+                            jnp.asarray(packed.x_inf))
+
+    def _finalize_oldest(self) -> List[Request]:
+        """Sync the oldest in-flight batch (block on its device results)
+        and complete its requests. FIFO, so completion order matches
+        submission order regardless of pipeline depth."""
+        fl = self._inflight.popleft()
+        t0 = time.perf_counter()
+        preds = np.asarray(fl.preds_dev)[:fl.nb_real][fl.inv]
+        orders = np.asarray(fl.orders_dev)[:fl.nb_real][fl.inv]
+        done = time.perf_counter()
+        self.batch_timings.append({
+            "host_s": fl.host_s, "dispatch_s": fl.dispatch_s,
+            "sync_s": done - t0, "n": len(fl.requests)})
+        self._complete(fl.requests, preds, orders, done)
+        return fl.requests
+
+    def _complete(self, batch: List[Request], preds, orders,
+                  done: float) -> None:
+        for r, p, o in zip(batch, preds, orders):
+            r.done_s = done
+            r.prediction = int(p)
+            r.exit_order = int(o)
+            self.stats.latencies.append(done - r.arrival_s)
+            self.stats.exit_hist[int(o)] = \
+                self.stats.exit_hist.get(int(o), 0) + 1
+        self.stats.served += len(batch)
+        self.stats.batches += 1
 
     def submit(self, node_ids, now: Optional[float] = None) -> None:
         now = time.perf_counter() if now is None else now
@@ -188,33 +330,45 @@ class NAIServingEngine:
         return batch
 
     def step(self) -> List[Request]:
-        """Serve one batch; returns completed requests."""
+        """Serve one batch; returns completed requests. With
+        pipeline_depth > 1 the completed requests belong to an EARLIER
+        batch (or none while the pipeline fills) — call `flush()` after
+        the last `step()` to drain the in-flight tail."""
         batch = self._form_batch()
         if not batch:
-            return []
+            return self.flush()
         nodes = np.asarray([r.node_id for r in batch])
         # dedupe per batch (client retries): the sampler requires
         # duplicate-free batches — duplicated rows would double-count in
         # the stationary state and skew every exit distance
         uniq, inv = np.unique(nodes, return_inverse=True)
-        if self.mode == "compiled":
-            p_u, o_u = self._infer_compiled(uniq)
-        else:
+        if self.mode == "host":
             p_u, o_u, _, _, _ = infer_batch_host(
                 self.cfg, self.nai, self.params, self.graph, uniq)
-        preds, orders = p_u[inv], o_u[inv]
-        done = time.perf_counter()
-        for r, p, o in zip(batch, preds, orders):
-            r.done_s = done
-            r.prediction = int(p)
-            r.exit_order = int(o)
-            self.stats.latencies.append(done - r.arrival_s)
-            self.stats.exit_hist[int(o)] = self.stats.exit_hist.get(int(o), 0) + 1
-        self.stats.served += len(batch)
-        self.stats.batches += 1
-        return batch
+            self._complete(batch, p_u[inv], o_u[inv], time.perf_counter())
+            return batch
+        t0 = time.perf_counter()
+        packed, step_active = self._host_stage(uniq)
+        t1 = time.perf_counter()
+        preds_dev, orders_dev = self._device_stage(packed, step_active)
+        t2 = time.perf_counter()
+        self._inflight.append(
+            _Inflight(batch, inv, packed.nb_real, preds_dev, orders_dev,
+                      host_s=t1 - t0, dispatch_s=t2 - t1))
+        done: List[Request] = []
+        while len(self._inflight) >= self.pipeline_depth:
+            done += self._finalize_oldest()
+        return done
+
+    def flush(self) -> List[Request]:
+        """Sync and complete every in-flight batch (no-op when serial)."""
+        done: List[Request] = []
+        while self._inflight:
+            done += self._finalize_oldest()
+        return done
 
     def run_until_drained(self) -> EngineStats:
         while self.queue:
             self.step()
+        self.flush()
         return self.stats

@@ -1,0 +1,200 @@
+"""Pipelined serving (PR 3): the two-stage engine pipeline must be a pure
+latency optimization — identical predictions and exit orders to serial
+serving on the same request stream, zero steady-state jit compiles (the
+batch-row series carry must not add a shape axis that defeats bucketing),
+zero steady-state bucket-sized pack allocations, and bounded stats."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.gnn import GNNConfig, init_classifiers, load_dataset
+from repro.gnn.nai import NAIConfig, _needed_mask
+from repro.gnn.sampler import sample_support
+from repro.serving import NAIServingEngine
+from repro.serving.engine import EngineStats, LatencyRing
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = load_dataset("pubmed-like", scale=0.02, seed=4)
+    # one FB feature block keeps interpret-mode Pallas test-sized
+    g = dataclasses.replace(
+        g, features=np.ascontiguousarray(g.features[:, :64]))
+    cfg = GNNConfig("sgc", 64, g.num_classes, k=2, hidden=32, mlp_layers=2)
+    params = {"cls": init_classifiers(cfg, jax.random.PRNGKey(0))}
+    nai = NAIConfig(t_s=6.0, t_min=1, t_max=2, batch_size=32)
+    return g, cfg, params, nai
+
+
+@pytest.fixture(scope="module")
+def stream(setup):
+    """One shared request stream with ragged batch sizes (same bucket)."""
+    g = setup[0]
+    rng = np.random.default_rng(0)
+    return [rng.choice(g.test_idx, size=s, replace=False)
+            for s in (32, 30, 32, 28)]
+
+
+def _serve_stream(engine, stream):
+    done = []
+    for nodes in stream:
+        engine.submit(nodes)
+        done += engine.step()
+    done += engine.flush()
+    return (np.array([r.node_id for r in done]),
+            np.array([r.prediction for r in done]),
+            np.array([r.exit_order for r in done]))
+
+
+@pytest.mark.parametrize("impl", ["segment", "block_ell", "fused"])
+def test_pipelined_matches_serial(setup, stream, impl):
+    """Same stream through a serial (depth-1) and a pipelined (depth-2)
+    engine: identical completion order, predictions, and exit orders."""
+    g, cfg, params, nai = setup
+    serial = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                              mode="compiled", spmm_impl=impl)
+    piped = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                             mode="compiled", spmm_impl=impl,
+                             pipeline_depth=2)
+    ns, ps, os_ = _serve_stream(serial, stream)
+    np_, pp, op = _serve_stream(piped, stream)
+    np.testing.assert_array_equal(np_, ns)   # FIFO completion preserved
+    np.testing.assert_array_equal(pp, ps)
+    np.testing.assert_array_equal(op, os_)
+    assert piped.stats.served == serial.stats.served == \
+        sum(len(b) for b in stream)
+    # the pipeline really ran deferred: some step() returned a previous
+    # batch, and flush() drained the in-flight tail
+    assert not piped._inflight
+
+
+def test_pipelined_steady_state_zero_compiles(setup, stream):
+    """Ragged batch sizes landing in already-seen buckets must be jit
+    cache hits AND pooled pack-buffer reuses — the batch-row series carry
+    must not introduce a new shape axis that defeats bucketing."""
+    g, cfg, params, nai = setup
+    eng = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                           mode="compiled", spmm_impl="segment",
+                           pipeline_depth=2)
+    # warm: pass 1 grows the high-water marks (compiles + allocations);
+    # pass 2 lets every rotating pool slot converge to the final bucket
+    # shapes (a slot allocated before the HWM peaked is replaced once)
+    _serve_stream(eng, stream)
+    _serve_stream(eng, stream)
+    compiles0 = eng.jit_stats["compiles"]
+    allocs0 = eng.pack_stats["allocs"]
+    _serve_stream(eng, stream)           # steady state
+    assert eng.jit_stats["compiles"] == compiles0
+    assert eng.jit_stats["hits"] >= len(stream)
+    assert eng.pack_stats["allocs"] == allocs0
+    assert eng.jit_cache_size() == compiles0
+
+
+def test_pipeline_depth_validation(setup):
+    g, cfg, params, nai = setup
+    with pytest.raises(ValueError):
+        NAIServingEngine(cfg, nai, params, g, pipeline_depth=0)
+    with pytest.raises(ValueError):
+        NAIServingEngine(cfg, nai, params, g, mode="host",
+                         pipeline_depth=2)
+
+
+def test_step_on_empty_queue_flushes(setup, stream):
+    g, cfg, params, nai = setup
+    eng = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                           mode="compiled", spmm_impl="segment",
+                           pipeline_depth=2)
+    eng.submit(stream[0])
+    assert eng.step() == []              # pipe filling
+    assert len(eng._inflight) == 1
+    done = eng.step()                    # empty queue -> drains in-flight
+    assert len(done) == len(stream[0])
+    assert not eng._inflight
+
+
+def test_donation_gating(setup):
+    """On CPU (this suite's backend) donation is auto-disabled — XLA CPU
+    does not implement buffer donation; an explicit donate=True still
+    threads the argnums through for accelerator backends."""
+    g, cfg, params, nai = setup
+    from repro.gnn.nai import make_compiled_infer
+    auto = NAIServingEngine(cfg, nai, params, g, mode="compiled",
+                            spmm_impl="segment")
+    expected = () if jax.default_backend() == "cpu" else (1, 2, 3)
+    assert auto.donate_argnums == expected
+    forced = make_compiled_infer(cfg, nai, spmm_impl="segment",
+                                 donate=True)
+    assert forced._donate_argnums == (1, 2, 3)
+
+
+# ------------------------------------------------------------ satellites
+def test_latency_ring_is_bounded():
+    ring = LatencyRing(capacity=100)
+    for i in range(1000):
+        ring.append(float(i))
+    assert len(ring) == 100
+    assert ring.total_appended == 1000
+    # window holds exactly the most recent 100 samples
+    assert sorted(ring.values()) == [float(v) for v in range(900, 1000)]
+
+
+def test_latency_ring_short_run_matches_list():
+    """Below capacity the ring is indistinguishable from the old
+    unbounded list: same samples, same percentiles, same summary."""
+    rng = np.random.default_rng(3)
+    lat = rng.random(50).tolist()
+    stats = EngineStats()
+    for v in lat:
+        stats.latencies.append(v)
+    for q in (50, 95, 99):
+        assert stats.percentile(q) == pytest.approx(
+            float(np.percentile(lat, q)))
+    assert stats.summary()["p50_ms"] == pytest.approx(
+        1e3 * float(np.percentile(lat, 50)))
+
+
+def test_engine_stats_served_unaffected_by_ring(setup, stream):
+    g, cfg, params, nai = setup
+    eng = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                           mode="compiled", spmm_impl="segment",
+                           latency_window=8)
+    _serve_stream(eng, stream)
+    total = sum(len(b) for b in stream)
+    assert eng.stats.served == total
+    assert len(eng.stats.latencies) == 8          # bounded window
+    assert eng.stats.latencies.total_appended == total
+    assert eng.stats.summary()["p99_ms"] >= 0.0
+
+
+def _needed_mask_isin_reference(sup, active_batch, remaining_hops):
+    """The pre-PR-3 np.isin implementation, kept as the oracle."""
+    S = len(sup)
+    dist = np.full(S, np.iinfo(np.int32).max, np.int32)
+    dist[:sup.n_batch][active_batch] = 0
+    frontier = np.flatnonzero(dist == 0)
+    for h in range(1, remaining_hops + 1):
+        if len(frontier) == 0:
+            break
+        m = np.isin(sup.dst, frontier)
+        cand = sup.src[m]
+        new = cand[dist[cand] > h]
+        dist[new] = h
+        frontier = np.unique(new)
+    return dist <= remaining_hops
+
+
+def test_needed_mask_matches_isin_reference(setup):
+    """The O(E) boolean-lookup frontier filter must reproduce the
+    np.isin scan bit-for-bit across hop budgets and active patterns."""
+    g, cfg, _, nai = setup
+    rng = np.random.default_rng(7)
+    nodes = rng.choice(g.test_idx, size=32, replace=False)
+    sup = sample_support(g, nodes, 3, cfg.r)
+    for frac in (1.0, 0.5, 0.1, 0.0):
+        active = rng.random(sup.n_batch) < frac
+        for hops in (0, 1, 2, 3):
+            got = _needed_mask(sup, active, hops)
+            want = _needed_mask_isin_reference(sup, active, hops)
+            np.testing.assert_array_equal(got, want, err_msg=f"{frac}/{hops}")

@@ -27,13 +27,17 @@ def test_masked_matches_host_propagation():
         cfg, nai, None, jnp.asarray(sup.src), jnp.asarray(sup.dst),
         jnp.asarray(sup.coef), jnp.asarray(x0), jnp.asarray(x_inf),
         sup.n_batch)
-    # propagated features match the host subgraph SpMM at every order
+    # the stacked history carries batch rows only (classification never
+    # reads support rows; the (S, f) state stays inside the loop)
+    assert series.shape == (nai.t_max + 1, sup.n_batch, x0.shape[1])
+    # propagated batch-row features match the host subgraph SpMM at every
+    # order
     xh = x0.copy()
     needed = np.ones(len(sup), bool)
     for l in range(1, 4):
         xh, _ = _subgraph_spmm(sup, xh, needed)
-        np.testing.assert_allclose(np.asarray(series[l]), xh,
-                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(series[l]),
+                                   xh[:sup.n_batch], rtol=2e-4, atol=2e-4)
     o = np.asarray(orders)
     assert o.min() >= 1 and o.max() <= 3
 
@@ -46,14 +50,13 @@ def test_masked_exit_orders_match_distances():
         jnp.asarray(sup.coef), jnp.asarray(x0), jnp.asarray(x_inf),
         sup.n_batch)
     o = np.asarray(orders)
-    nb = sup.n_batch
     for l in (1, 2):
-        d = np.linalg.norm(np.asarray(series[l])[:nb] - x_inf, axis=1)
+        d = np.linalg.norm(np.asarray(series[l]) - x_inf, axis=1)
         exited_here = o == l
         # anyone who exited at l crossed the threshold at l but not earlier
         assert (d[exited_here] < nai.t_s).all()
     # nodes that never crossed land at t_max
-    d1 = np.linalg.norm(np.asarray(series[1])[:nb] - x_inf, axis=1)
-    d2 = np.linalg.norm(np.asarray(series[2])[:nb] - x_inf, axis=1)
+    d1 = np.linalg.norm(np.asarray(series[1]) - x_inf, axis=1)
+    d2 = np.linalg.norm(np.asarray(series[2]) - x_inf, axis=1)
     never = (d1 >= nai.t_s) & (d2 >= nai.t_s)
     assert (o[never] == 3).all()
