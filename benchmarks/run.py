@@ -17,7 +17,8 @@ def main() -> None:
                     help="smaller datasets, fewer epochs")
     ap.add_argument("--only", default="",
                     help="comma list: table3,table5,table6,table7,fig2,fig3,"
-                         "roofline,kernels,ablation,serving")
+                         "roofline,kernels,ablation,serving,"
+                         "serving_sharded")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -60,6 +61,9 @@ def main() -> None:
     if only is None or "serving" in only:
         from benchmarks.serving_bench import run as sb
         suites.append(("serving", sb))
+    if only is None or "serving_sharded" in only:
+        from benchmarks.serving_bench import run_sharded as sbs
+        suites.append(("serving_sharded", sbs))
 
     print("name,us_per_call,derived")
     failures = 0

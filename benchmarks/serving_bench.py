@@ -18,10 +18,17 @@ the structural columns carry the backend-independent signal:
   timed pass (must be 0: the engine packs into a rotating pool of
   preallocated buffer sets).
 
+``--sharded`` adds mesh-sharded serving rows (req/s and p50/95/99 vs
+device count for row-sharded engines built on `make_serving_mesh`; see
+README "Sharded serving"): the n_shards / steady-compile / pack-alloc
+columns are the structural guarantee — a sharded engine must report one
+shard per device and keep the zero-steady-state invariants — while
+host-platform device timings share physical cores and are trend-only.
+
 Runnable standalone::
 
     PYTHONPATH=src python -m benchmarks.serving_bench [--smoke] [--check]
-                                                      [--out F]
+                                                      [--sharded] [--out F]
 
 writes ``BENCH_serving.json`` (``BENCH_serving_smoke.json`` with
 ``--smoke``) so the serving trajectory accumulates across commits.
@@ -96,13 +103,18 @@ def _bench_configs(g, cfg, params, nai, specs, stream,
     """Warm every engine, then INTERLEAVE the timed rounds (all configs
     per round, best round per config) so machine drift during the run
     hits every configuration equally instead of whichever happened to be
-    measured in a contended window."""
+    measured in a contended window. Each spec is a dict with keys
+    ``mode``/``impl``/``depth`` and optionally ``devices`` (> 1 serves
+    through a ``make_serving_mesh`` row-sharded engine)."""
+    from repro.launch.mesh import make_serving_mesh
     from repro.serving.engine import EngineStats, LatencyRing
     engines, baselines = [], []
-    for mode, impl, depth in specs:
-        kw = dict(max_wait_s=10.0, mode=mode)
-        if mode == "compiled":
-            kw.update(spmm_impl=impl, pipeline_depth=depth)
+    for sp in specs:
+        kw = dict(max_wait_s=10.0, mode=sp["mode"])
+        if sp["mode"] == "compiled":
+            kw.update(spmm_impl=sp["impl"], pipeline_depth=sp["depth"])
+        if sp.get("devices", 1) > 1:
+            kw["mesh"] = make_serving_mesh(sp["devices"])
         eng = NAIServingEngine(cfg, nai, params, g, **kw)
         _drain(eng, stream)               # warm 1: compiles, HWM growth
         _drain(eng, stream)               # warm 2: pack pool converges
@@ -120,11 +132,14 @@ def _bench_configs(g, cfg, params, nai, specs, stream,
                                summary=eng.stats.summary(),
                                timings=list(eng.batch_timings))
     rows = []
-    for (mode, impl, depth), eng, (c0, a0), b in zip(
-            specs, engines, baselines, best):
+    for sp, eng, (c0, a0), b in zip(specs, engines, baselines, best):
+        mode = sp["mode"]
         row = {
-            "mode": mode, "impl": impl if mode == "compiled" else "-",
-            "pipeline_depth": depth,
+            "mode": mode,
+            "impl": sp["impl"] if mode == "compiled" else "-",
+            "pipeline_depth": sp["depth"],
+            "devices": sp.get("devices", 1),
+            "n_shards": eng.n_shards,
             "req_per_s": round(b["served"] / b["wall"], 1),
             "p50_ms": round(b["summary"]["p50_ms"], 3),
             "p95_ms": round(b["summary"]["p95_ms"], 3),
@@ -140,6 +155,26 @@ def _bench_configs(g, cfg, params, nai, specs, stream,
                     1e3 * float(np.mean([t[k] for t in b["timings"]])), 3)
         rows.append(row)
     return rows
+
+
+def _sharded_specs(smoke: bool) -> List[Dict]:
+    """Sharded serving sweep: req/s vs device count for the CPU-real
+    segment impl (1/2/4/8 — the 1-device row is the unsharded
+    reference), plus the Pallas impls at the middle counts for kernel-
+    path structural coverage (interpret-mode timings are emulation; the
+    structural counters are the signal). Counts are clipped to the
+    available devices — run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for the full
+    sweep."""
+    avail = len(jax.devices())
+    seg = [d for d in ((1, 2) if smoke else (1, 2, 4, 8)) if d <= avail]
+    krn = [d for d in ((2,) if smoke else (2, 4)) if d <= avail]
+    specs = [dict(mode="compiled", impl="segment", depth=2, devices=d)
+             for d in seg]
+    for impl in ("block_ell", "fused"):
+        specs += [dict(mode="compiled", impl=impl, depth=2, devices=d)
+                  for d in krn]
+    return specs
 
 
 def _series_structural(g, cfg, nai, stream) -> Dict:
@@ -171,15 +206,15 @@ def _series_structural(g, cfg, nai, stream) -> Dict:
     }
 
 
-def collect(smoke: bool = False) -> Dict:
+def collect(smoke: bool = False, sharded: bool = False) -> Dict:
     g, cfg, params, nai = _setup(smoke)
     n_batches = 4 if smoke else 8
     rounds = 2 if smoke else 3
     stream = _request_stream(g, nai, n_batches)
-    specs = [("host", "-", 1)]
+    specs = [dict(mode="host", impl="-", depth=1)]
     for impl in ("segment", "block_ell", "fused"):
         for depth in (1, 2):
-            specs.append(("compiled", impl, depth))
+            specs.append(dict(mode="compiled", impl=impl, depth=depth))
     configs = _bench_configs(g, cfg, params, nai, specs, stream, rounds)
     speedups = {}
     for impl in ("segment", "block_ell", "fused"):
@@ -205,12 +240,13 @@ def collect(smoke: bool = False) -> Dict:
         "pipelined_req_per_s": d_pip["req_per_s"],
         "pipelined_ge_serial": d_pip["req_per_s"] >= d_ser["req_per_s"],
     }
-    return {
+    payload = {
         "bench": "serving_bench",
         "smoke": bool(smoke),
         "unix_time": time.time(),
         "jax": jax.__version__,
         "backend": jax.default_backend(),
+        "devices_available": len(jax.devices()),
         "shape": {"batch_size": nai.batch_size, "t_max": nai.t_max,
                   "feat": 64, "n_batches": n_batches},
         "structural": _series_structural(g, cfg, nai, stream),
@@ -218,6 +254,10 @@ def collect(smoke: bool = False) -> Dict:
         "default_shape_comparison": default_cmp,
         "configs": configs,
     }
+    if sharded:
+        payload["sharded"] = _bench_configs(
+            g, cfg, params, nai, _sharded_specs(smoke), stream, rounds)
+    return payload
 
 
 def check(payload: Dict) -> List[str]:
@@ -227,17 +267,37 @@ def check(payload: Dict) -> List[str]:
     if st["series_rows"] > st["nb_pad"]:
         errs.append(f"series carry stores {st['series_rows']} rows > "
                     f"nb_pad {st['nb_pad']} (batch-row carry regressed)")
-    for c in payload["configs"]:
+    for c in payload["configs"] + payload.get("sharded", []):
         if c["mode"] != "compiled":
             continue
-        tag = f"{c['impl']}/depth{c['pipeline_depth']}"
+        tag = f"{c['impl']}/depth{c['pipeline_depth']}/dev{c['devices']}"
         if c["steady_compiles"] > 0:
             errs.append(f"{tag}: {c['steady_compiles']} jit compiles in "
                         f"steady state (bucketing defeated)")
         if c["steady_pack_allocs"] > 0:
             errs.append(f"{tag}: {c['steady_pack_allocs']} bucket-sized "
                         f"pack allocations in steady state")
+    for c in payload.get("sharded", []):
+        if c["n_shards"] != c["devices"]:
+            errs.append(f"sharded/{c['impl']}/dev{c['devices']}: engine "
+                        f"reports {c['n_shards']} shards (mesh not "
+                        f"threaded through)")
     return errs
+
+
+def _sharded_csv(sharded: List[Dict]) -> List[str]:
+    rows = []
+    for c in sharded:
+        name = f"serving/sharded/{c['impl']}/dev{c['devices']}"
+        us = 1e6 / max(c["req_per_s"], 1e-9)
+        rows.append(csv_row(
+            name, us,
+            f"req_per_s={c['req_per_s']};p50_ms={c['p50_ms']};"
+            f"p95_ms={c['p95_ms']};p99_ms={c['p99_ms']};"
+            f"n_shards={c['n_shards']};"
+            f"steady_compiles={c['steady_compiles']};"
+            f"steady_pack_allocs={c['steady_pack_allocs']}"))
+    return rows
 
 
 def _rows(payload: Dict) -> List[str]:
@@ -255,6 +315,7 @@ def _rows(payload: Dict) -> List[str]:
                         f"dispatch_ms={c['dispatch_ms']};"
                         f"device_sync_ms={c['device_sync_ms']}")
         rows.append(csv_row(name, us, derived))
+    rows += _sharded_csv(payload.get("sharded", []))
     st = payload["structural"]
     rows.append(csv_row(
         "serving/structural/series_carry", 0.0,
@@ -268,19 +329,38 @@ def run() -> list:
     return _rows(collect(smoke=True))
 
 
+def run_sharded() -> list:
+    """Sharded rows only (for benchmarks.run): serve the smoke stream
+    through row-sharded engines at every device count available. On a
+    1-device backend there is nothing to shard (the only row would
+    duplicate the serving suite's segment/pipelined row) — force host
+    devices (XLA_FLAGS=--xla_force_host_platform_device_count=8) for
+    the real sweep."""
+    if len(jax.devices()) == 1:
+        return []
+    g, cfg, params, nai = _setup(True)
+    stream = _request_stream(g, nai, 4)
+    return _sharded_csv(_bench_configs(
+        g, cfg, params, nai, _sharded_specs(True), stream, 2))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes / few rounds (CI smoke job)")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero on structural counter regression")
+    ap.add_argument("--sharded", action="store_true",
+                    help="add mesh-sharded serving rows (device counts "
+                         "clipped to what the backend exposes; force "
+                         "host devices via XLA_FLAGS for the full sweep)")
     ap.add_argument("--out", default="",
                     help="JSON output path (default BENCH_serving.json, "
                          "or BENCH_serving_smoke.json with --smoke)")
     args = ap.parse_args()
     out_path = args.out or ("BENCH_serving_smoke.json" if args.smoke
                             else "BENCH_serving.json")
-    payload = collect(smoke=args.smoke)
+    payload = collect(smoke=args.smoke, sharded=args.sharded)
     print("name,us_per_call,derived")
     for r in _rows(payload):
         print(r, flush=True)

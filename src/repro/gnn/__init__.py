@@ -1,20 +1,26 @@
 from repro.gnn.graph import Graph, propagated_series, stationary_weights
+from repro.gnn.backends import (BACKENDS, PropagationBackend, get_backend,
+                                register_backend, run_propagation)
 from repro.gnn.datasets import load_dataset, PRESETS
 from repro.gnn.models import GNNConfig, apply_classifier, init_classifiers
 from repro.gnn.distill import DistillConfig, train_nai, evaluate_classifier
 from repro.gnn.nai import (NAIConfig, NAIResult, accuracy, infer_all,
                            make_compiled_infer, order_distribution)
-from repro.gnn.packing import (PackedSupport, next_bucket, pack_support,
-                               step_active_blocks)
+from repro.gnn.packing import (PackedSupport, batch_bucket, next_bucket,
+                               pack_support, shard_batch_perm,
+                               shard_row_perm, step_active_blocks)
 from repro.gnn.sampler import (Support, sample_support,
                                sample_support_legacy)
 
 __all__ = [
-    "Graph", "propagated_series", "stationary_weights", "load_dataset",
+    "Graph", "propagated_series", "stationary_weights", "BACKENDS",
+    "PropagationBackend", "get_backend", "register_backend",
+    "run_propagation", "load_dataset",
     "PRESETS", "GNNConfig", "apply_classifier", "init_classifiers",
     "DistillConfig", "train_nai", "evaluate_classifier", "NAIConfig",
     "NAIResult", "accuracy", "infer_all", "make_compiled_infer",
-    "order_distribution", "PackedSupport", "next_bucket", "pack_support",
+    "order_distribution", "PackedSupport", "batch_bucket", "next_bucket",
+    "pack_support", "shard_batch_perm", "shard_row_perm",
     "step_active_blocks", "Support", "sample_support",
     "sample_support_legacy",
 ]

@@ -1,0 +1,350 @@
+"""Propagation backends: one interface over every SpMM implementation.
+
+Before this module the three `spmm_impl` choices (``segment`` edge-list
+segment-sum, ``block_ell`` Pallas SpMM + jnp exit distance, ``fused``
+one-kernel SpMM+exit) each carried their own branch in
+`repro.gnn.nai.infer_batch_masked`, their own operand-dict construction in
+the serving engine, and no story for running across devices. Here every
+implementation is a `PropagationBackend` registered in `BACKENDS`:
+
+* ``step(operands, x_full, node_active, active_rb, ts2, ...)`` — ONE NAP
+  propagation step: consume the (gathered) feature state, produce the
+  propagated rows this backend owns plus the per-batch-node exit flags.
+  The exit arithmetic is pinned to squared-f32 distance vs the squared
+  threshold (negative threshold = exits disabled this step), exactly what
+  the fused kernel computes in VMEM, so exit orders are bit-consistent
+  across backends.
+* `run_propagation` — the ONE masked NAP fori-loop (previously
+  triplicated): carries ``(x, series, exit_order, live)``, asks the
+  backend for each step, and runs either single-device or **sharded**
+  under `shard_map` when given a mesh with a ``data`` axis.
+
+Sharded execution (the scale story — supports larger than one device's
+HBM): `repro.gnn.packing.pack_support(n_shards=D)` splits the padded
+support rows round-robin by CB-row superblock across the ``data`` axis
+(shard-major layout, every shard the same static shapes). Each step the
+frontier features are all-gathered across node shards (`all_gather` over
+``data`` — features stay unsharded: serving feature dims are a few
+hundred, rows are the memory axis), each shard updates only the row
+blocks it owns, computes exit distances for its own batch rows, and the
+global any-batch-node-live flag is reduced with a `psum`. Because the
+packer permutes whole CB superblocks, every tile keeps its single-device
+contents and in-row-block accumulation order, so sharded propagation is
+bit-identical to single-device — the parity oracle the sharded tests
+hold us to. Operand partition specs are expressed through the logical
+axis system (`repro.sharding.logical.spec`, rule ``row_shard``) so the
+same backend lowers on any mesh that names a ``data`` axis (e.g.
+`repro.launch.mesh.make_serving_mesh`).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.experimental.shard_map import shard_map
+
+from repro.kernels.nap_step import nap_step_fused
+from repro.kernels.spmm import spmm_block_ell
+from repro.kernels.spmm.kernel import CB, RB
+from repro.sharding.logical import spec
+
+BACKENDS: Dict[str, "PropagationBackend"] = {}
+
+
+def register_backend(cls):
+    """Class decorator: instantiate and register under ``cls.name``."""
+    BACKENDS[cls.name] = cls()
+    return cls
+
+
+def get_backend(name: str) -> "PropagationBackend":
+    if name not in BACKENDS:
+        raise ValueError(f"unknown spmm_impl {name!r} "
+                         f"(registered: {sorted(BACKENDS)})")
+    return BACKENDS[name]
+
+
+def normalize_mesh(mesh):
+    """The ONE degenerate-mesh policy (every sharded entry point routes
+    through here): None stays None, a mesh must name a ``data`` axis,
+    and a data axis of size 1 collapses to None — the plain
+    single-device path, so 1-device meshes cost no shard_map overhead
+    and no CB*D batch padding."""
+    if mesh is None:
+        return None
+    if "data" not in mesh.axis_names:
+        raise ValueError(f"sharded propagation needs a 'data' mesh axis, "
+                         f"got {mesh.axis_names}")
+    return mesh if int(mesh.shape["data"]) > 1 else None
+
+
+def _distance_exits(out, x_inf, ts2, n_batch):
+    """Squared-f32 exit decision over the batch region — the arithmetic
+    contract shared with the fused kernel (ts2 < 0 disables exits, since
+    d2 >= 0 always)."""
+    d2 = jnp.sum((out[:n_batch] - x_inf) ** 2, axis=1)
+    return d2 < ts2
+
+
+class PropagationBackend:
+    """One NAP propagation step behind a uniform contract.
+
+    Class attributes drive the rest of the stack generically:
+
+    * ``uses_tiles`` — consumes block-ELL operands (``tiles``,
+      ``tile_col``, ``valid``) plus the static ``step_active`` row-block
+      predicate; the packer must build tiles.
+    * ``uses_edges`` — consumes the bucket-padded edge list
+      (``src``/``dst``/``coef``); the packer must build edges. Sharded,
+      the edge arrays carry a leading shard axis and ``dst`` holds
+      shard-LOCAL row ids.
+    * ``uses_factors`` — consumes the rank-1 stationary-state factors
+      (``c_inf``/``s_inf``) instead of a dense ``x_inf``.
+    * ``uses_dense_x_inf`` — the exit distance is computed outside the
+      kernel against the dense ``x_inf`` operand.
+    * ``operand_logical`` — operand key -> logical dim names for the
+      SHARDED layout (``row_shard`` = partitioned over the mesh's
+      ``data`` axis, None = replicated); consumed by `run_propagation`'s
+      shard_map specs and the engine's sharded device placement.
+    """
+    name: str = ""
+    uses_tiles = False
+    uses_edges = False
+    uses_factors = False
+    uses_dense_x_inf = True
+    operand_logical: Dict[str, tuple] = {}
+
+    def validate(self, operands: dict, x0, n_batch: int) -> None:
+        """Raise ValueError on operand-contract violations (cheap, static
+        shape checks only)."""
+
+    def step(self, ops: dict, x_full, node_active, active_rb, ts2, *,
+             n_batch: int, n_rows: int, interpret: bool
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """One propagation + exit-decision step.
+
+        ``x_full`` is the FULL (possibly all-gathered) feature state;
+        ``node_active`` (n_batch,) int32 not-yet-exited flags;
+        ``active_rb`` the (n_rb_local,) row-block predicate (None for
+        backends without tiles); ``ts2`` the squared threshold (negative
+        = exits disabled). Returns ``(x_out (n_rows, f), exits
+        (n_batch,) bool)`` where ``x_out`` covers exactly the rows this
+        shard owns.
+        """
+        raise NotImplementedError
+
+
+@register_backend
+class SegmentBackend(PropagationBackend):
+    """jnp segment-sum over the edge list; every owned row updated every
+    step (no tile predication — the baseline the kernels are measured
+    against)."""
+    name = "segment"
+    uses_edges = True
+    operand_logical = {
+        "src": ("row_shard", None),
+        "dst": ("row_shard", None),
+        "coef": ("row_shard", None),
+        "x_inf": ("row_shard", None),
+    }
+
+    def step(self, ops, x_full, node_active, active_rb, ts2, *,
+             n_batch, n_rows, interpret):
+        contrib = ops["coef"][:, None] * x_full[ops["src"]]
+        out = jax.ops.segment_sum(contrib, ops["dst"], num_segments=n_rows)
+        return out, _distance_exits(out, ops["x_inf"], ts2, n_batch)
+
+
+@register_backend
+class BlockEllBackend(PropagationBackend):
+    """Pallas block-ELL SpMM kernel + separate jnp exit distance (one
+    extra HBM read of the batch region per step)."""
+    name = "block_ell"
+    uses_tiles = True
+    operand_logical = {
+        "tiles": ("row_shard", None, None, None),
+        "tile_col": ("row_shard", None),
+        "valid": ("row_shard", None),
+        "step_active": (None, "row_shard"),
+        "x_inf": ("row_shard", None),
+    }
+
+    def step(self, ops, x_full, node_active, active_rb, ts2, *,
+             n_batch, n_rows, interpret):
+        out = spmm_block_ell(ops["tiles"], ops["tile_col"], ops["valid"],
+                             active_rb, x_full, interpret=interpret)
+        return out, _distance_exits(out, ops["x_inf"], ts2, n_batch)
+
+
+@register_backend
+class FusedBackend(PropagationBackend):
+    """Fused NAP step kernel: SpMM accumulation, exit distance (rebuilt
+    from the rank-1 stationary factors in VMEM) and per-node exit flags
+    in one grid pass — the propagated block never round-trips HBM
+    between matmul and distance check."""
+    name = "fused"
+    uses_tiles = True
+    uses_factors = True
+    uses_dense_x_inf = False
+    operand_logical = {
+        "tiles": ("row_shard", None, None, None),
+        "tile_col": ("row_shard", None),
+        "valid": ("row_shard", None),
+        "step_active": (None, "row_shard"),
+        "c_inf": ("row_shard",),
+        "s_inf": (None,),
+    }
+
+    def validate(self, operands, x0, n_batch):
+        S, f = x0.shape
+        if n_batch % RB or S % CB:
+            raise ValueError(
+                f"fused path needs packed operands: n_batch {n_batch} "
+                f"% RB, rows {S} % CB must be 0 (see repro.gnn.packing)")
+        if "c_inf" not in operands or "s_inf" not in operands:
+            raise ValueError("fused path needs x_inf_factors=(c, s), the "
+                             "rank-1 stationary-state factors")
+        c = operands["c_inf"].reshape(-1)
+        s = operands["s_inf"].reshape(-1)
+        if c.shape[0] != n_batch or s.shape[0] != f:
+            raise ValueError(f"fused path needs factors padded to "
+                             f"({n_batch},) and ({f},), got "
+                             f"{c.shape} {s.shape}")
+
+    def step(self, ops, x_full, node_active, active_rb, ts2, *,
+             n_batch, n_rows, interpret):
+        c_inf = ops["c_inf"].reshape(-1, 1).astype(x_full.dtype)
+        s_inf = ops["s_inf"].reshape(1, -1).astype(x_full.dtype)
+        out, exits, _blk_still = nap_step_fused(
+            ops["tiles"], ops["tile_col"], ops["valid"], active_rb, x_full,
+            c_inf, s_inf, node_active[:, None], ts2.reshape(1),
+            interpret=interpret)
+        # any(blk_still) == any(node_active & ~exits): the generic loop
+        # recovers the live flag from exit_order, so blk_still is not
+        # threaded out (it exists for two_launch parity of the raw kernel)
+        return out, exits[:, 0] != 0
+
+
+def pack_operands(backend: PropagationBackend, packed,
+                  step_active=None) -> dict:
+    """Host-side operand dict for a `repro.gnn.packing.PackedSupport`,
+    keyed exactly as the backend's ``operand_logical`` (minus the dense
+    ``x_inf``, which travels as its own argument through
+    `make_compiled_infer`). One place instead of per-impl branches in
+    every consumer (serving engine, distributed propagation, benches)."""
+    ops = {}
+    if backend.uses_tiles:
+        if step_active is None:
+            raise ValueError(f"{backend.name} needs the step_active "
+                             f"row-block predicate")
+        ops.update(tiles=packed.tiles, tile_col=packed.tile_col,
+                   valid=packed.valid, step_active=step_active)
+    if backend.uses_edges:
+        ops.update(src=packed.src, dst=packed.dst, coef=packed.coef)
+    if backend.uses_factors:
+        ops.update(c_inf=packed.c_inf, s_inf=packed.s_inf)
+    return ops
+
+
+# ------------------------------------------------------------ the loop
+def _masked_loop(backend, nai, ops, x0, n_batch, n_rows, interpret,
+                 gather, any_fn):
+    """The ONE masked NAP fori-loop (previously triplicated per impl).
+
+    Carries ``(x (n_rows, f), series (T_max+1, n_batch, f), exit_order
+    (n_batch,), live ())`` where every row count is LOCAL to the shard
+    when running under shard_map (`gather` rebuilds the full frontier,
+    `any_fn` reduces the live flag across shards). Exit orders of 0
+    after the loop mean never-exited and collapse to T_max.
+    """
+    tmax = nai.t_max
+    f = x0.shape[1]
+    ts2_on = jnp.float32(nai.t_s) ** 2
+    sa = ops.get("step_active")
+
+    def body(l, carry):
+        x, series, exit_order, live = carry
+        node_active = (exit_order == 0).astype(jnp.int32)
+        # T_min/T_max gating via the threshold sentinel: a negative
+        # squared threshold means nobody exits this step (shared with the
+        # fused kernel, so gating arithmetic is identical across backends)
+        ts2 = jnp.where((l >= nai.t_min) & (l < tmax), ts2_on,
+                        jnp.float32(-1.0))
+        active_rb = sa[l - 1] * live if sa is not None else None
+        x, exits = backend.step(ops, gather(x), node_active, active_rb,
+                                ts2, n_batch=n_batch, n_rows=n_rows,
+                                interpret=interpret)
+        exit_order = jnp.where((node_active != 0) & exits, l, exit_order)
+        live = any_fn(exit_order == 0)
+        # per-step history carries batch rows only (classification never
+        # reads support rows; see ROADMAP "Pipelined serving")
+        series = series.at[l].set(x[:n_batch])
+        return x, series, exit_order, live
+
+    series = jnp.zeros((tmax + 1, n_batch, f),
+                       x0.dtype).at[0].set(x0[:n_batch])
+    exit_order = jnp.zeros((n_batch,), jnp.int32)
+    _, series, exit_order, _ = jax.lax.fori_loop(
+        1, tmax + 1, body, (x0, series, exit_order, jnp.int32(1)))
+    exit_order = jnp.where(exit_order == 0, tmax, exit_order)
+    return exit_order, series
+
+
+def run_propagation(backend: PropagationBackend, nai, operands: dict,
+                    x0, n_batch: int, *, interpret: bool = True,
+                    mesh=None):
+    """Run the masked NAP loop for any registered backend.
+
+    ``operands`` holds the backend's packed arrays (including the dense
+    ``x_inf`` for backends with ``uses_dense_x_inf``). Returns
+    ``(exit_order (n_batch,), series (T_max+1, n_batch, f))``.
+
+    With ``mesh=None`` (or a ``data`` axis of size 1) this is the
+    single-device path. Otherwise the loop runs under `shard_map`:
+    operands must come from ``pack_support(..., n_shards=D)`` (row
+    partition in shard-major superblock order) and the returned
+    exit_order/series are in the PACKED (permuted) batch order — undo
+    with `repro.gnn.packing.shard_batch_perm`.
+    """
+    mesh = normalize_mesh(mesh)
+    if mesh is None:
+        backend.validate(operands, x0, n_batch)
+        return _masked_loop(
+            backend, nai, dict(operands), x0, n_batch, x0.shape[0],
+            interpret, gather=lambda x: x,
+            any_fn=lambda m: jnp.any(m).astype(jnp.int32))
+
+    D = int(mesh.shape["data"])
+    S = x0.shape[0]
+    if n_batch % (CB * D) or S % (CB * D):
+        raise ValueError(
+            f"sharded operands must be packed with n_shards={D}: n_batch "
+            f"{n_batch} and rows {S} must be multiples of CB*D = {CB * D}")
+    nb_loc, rows_loc = n_batch // D, S // D
+    keys = tuple(backend.operand_logical)
+    arrays = [operands[k] for k in keys]
+    in_specs = tuple(spec(*backend.operand_logical[k], mesh=mesh)
+                     for k in keys) + (spec("row_shard", None, mesh=mesh),)
+    out_specs = (spec("row_shard", mesh=mesh),
+                 spec(None, "row_shard", None, mesh=mesh))
+
+    def local_fn(*args):
+        ops = dict(zip(keys, args[:-1]))
+        if backend.uses_edges:
+            # (D, e) shard-stacked edge arrays block-slice to (1, e)
+            ops.update({k: ops[k][0] for k in ("src", "dst", "coef")})
+        backend.validate(ops, args[-1], nb_loc)
+        return _masked_loop(
+            backend, nai, ops, args[-1], nb_loc, rows_loc, interpret,
+            gather=lambda x: jax.lax.all_gather(x, "data", axis=0,
+                                                tiled=True),
+            any_fn=lambda m: (jax.lax.psum(jnp.any(m).astype(jnp.int32),
+                                           "data") > 0).astype(jnp.int32))
+
+    # check_rep=False: the rep-tracker cannot see through the fori_loop
+    # carry; correctness is covered by the bit-parity tests
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return fn(*arrays, x0)

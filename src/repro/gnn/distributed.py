@@ -1,24 +1,26 @@
-"""Distributed feature propagation: the paper's substrate at pod scale.
+"""Distributed feature propagation on the PropagationBackend stack.
 
-Node-partitioned SpMM under `shard_map`: nodes (and their in-edges) are
-split across the 'data' axis; features are split across 'model'. One
-propagation step is
+This module used to carry a toy dense `shard_map` segment-sum that shared
+zero code with the block-ELL/fused kernels the serving engine actually
+runs — a dead end for scaling work. It is now a thin veneer over the
+real stack: the whole graph is viewed as its own support (`
+graph_as_support`), packed with `repro.gnn.packing.pack_support(
+n_shards=D)` into the same shard-major row-partitioned operands serving
+uses, and propagated by `repro.gnn.backends.run_propagation` under
+shard_map — so ANY registered backend (``segment``, ``block_ell``,
+``fused``) runs node-partitioned across the mesh's ``data`` axis, and
+full-graph distributed propagation exercises exactly the code path that
+serves batches. The old module's numeric oracles (host
+`propagated_series` agreement) live on in tests/test_distributed_gnn.py
+as cross-checks of the new path.
 
-    out[i] = sum_j coef(j->i) x[j]
-
-with x gathered across node shards (`all_gather` over 'data') and the
-feature dim staying sharded — each device reduces its own (rows x feature
-slice) block. For the paper's graphs (feature dim 100-500, nodes in the
-millions) the gather is the right trade: x is (n, f/16) per device and the
-adjacency never moves.
-
-The NAP loop composes on top: per-shard exit masks feed the same
-`active_blocks_from_nodes` predication the Pallas kernel consumes; the
-distance reduction is local (features sharded), followed by a psum over
-'model' for the l2 norm.
+`distributed_nap_distances` keeps the feature-axis story: per-node
+||x - x_inf|| with features sharded over ``model`` — a local partial
+sum of squares plus a psum over the feature axis. Serving shards rows
+(features are a few hundred wide; rows are the memory axis), but the
+helper documents how a feature-sharded deployment would reduce Eq. 8.
 """
 from __future__ import annotations
-
 
 import jax
 import jax.numpy as jnp
@@ -27,62 +29,75 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.gnn.backends import get_backend, pack_operands, run_propagation
 from repro.gnn.graph import Graph, edge_coefficients
+from repro.gnn.nai import NAIConfig
+from repro.gnn.packing import (pack_support, shard_batch_perm,
+                               step_active_blocks)
+from repro.gnn.sampler import Support
 
 
-def partition_graph(g: Graph, n_shards: int, r: float = 0.5):
-    """Split nodes contiguously into `n_shards`; each shard keeps the edges
-    whose DESTINATION lands in the shard (src stays global). Returns padded
-    per-shard edge arrays (stacked, shard-major) + padded feature matrix."""
-    n_pad = -(-g.n // n_shards) * n_shards
-    rows = n_pad // n_shards
-    coef = edge_coefficients(g, r)
-    shard_of = g.dst // rows
-    counts = np.bincount(shard_of, minlength=n_shards)
-    e_pad = -(-counts.max() // 8) * 8
-
-    src = np.zeros((n_shards, e_pad), np.int32)
-    dst = np.zeros((n_shards, e_pad), np.int32)     # LOCAL row within shard
-    cf = np.zeros((n_shards, e_pad), np.float32)    # 0 padding = no-op edge
-    for s in range(n_shards):
-        m = shard_of == s
-        k = int(m.sum())
-        src[s, :k] = g.src[m]
-        dst[s, :k] = g.dst[m] - s * rows
-        cf[s, :k] = coef[m]
-    x = np.zeros((n_pad, g.features.shape[1]), np.float32)
-    x[:g.n] = g.features
-    return src, dst, cf, x, rows
+def graph_as_support(g: Graph, r: float = 0.5) -> Support:
+    """The whole graph viewed as its own support: every node is a batch
+    node at hop 0 and the induced subgraph is the graph itself. Feeding
+    this through `pack_support(n_shards=D)` turns full-graph propagation
+    into the serving engine's sharded operand problem."""
+    n = g.n
+    return Support(nodes=np.arange(n, dtype=np.int64),
+                   hop=np.zeros(n, np.int32), n_batch=n,
+                   src=g.src.astype(np.int32), dst=g.dst.astype(np.int32),
+                   coef=edge_coefficients(g, r), sub_edges=g.num_edges)
 
 
-def make_distributed_propagate(mesh, rows: int, n_shards: int):
-    """Returns a jitted `propagate(src, dst, coef, x) -> x'` running under
-    shard_map on (data=node shards, model=feature shards)."""
+def pack_graph(g: Graph, n_shards: int, r: float = 0.5,
+               spmm_impl: str = "segment", *, nb_bucket=None,
+               s_bucket=None, tb_bucket=None):
+    """(backend, PackedSupport) for full-graph propagation. Exits are
+    disabled downstream (t_min > t_max), so the stationary operands are
+    inert: zero rank-1 factors for the fused backend, an all-zero dense
+    x_inf otherwise. Explicit buckets pin the padding geometry so runs
+    at different shard counts are bit-comparable."""
+    be = get_backend(spmm_impl)
+    sup = graph_as_support(g, r)
+    x0 = g.features.astype(np.float32)
+    f = x0.shape[1]
+    factors = ((np.zeros(sup.n_batch, np.float32),
+                np.zeros(f, np.float32)) if be.uses_factors else None)
+    x_inf = np.zeros((sup.n_batch, 0 if be.uses_factors else f),
+                     np.float32)
+    packed = pack_support(sup, x0, x_inf, nb_bucket=nb_bucket,
+                          s_bucket=s_bucket, tb_bucket=tb_bucket,
+                          build_tiles=be.uses_tiles,
+                          build_edges=be.uses_edges,
+                          x_inf_factors=factors, n_shards=n_shards)
+    return be, packed
 
-    def local_step(src, dst, coef, x):
-        # src/dst/coef: (1, E) this shard's edges; x: (rows_total, f_loc)
-        src, dst, coef = src[0], dst[0], coef[0]
-        x_full = jax.lax.all_gather(x, "data", axis=0, tiled=True)
-        contrib = coef[:, None] * x_full[src]
-        return jax.ops.segment_sum(contrib, dst, num_segments=rows)
 
-    return jax.jit(shard_map(
-        local_step, mesh=mesh,
-        in_specs=(P("data", None), P("data", None), P("data", None),
-                  P("data", "model")),
-        out_specs=P("data", "model")))
-
-
-def distributed_series(mesh, g: Graph, k: int, r: float = 0.5):
-    """[X^(0..k)] computed with the distributed step; host-verifiable."""
-    n_shards = mesh.shape["data"]
-    src, dst, cf, x, rows = partition_graph(g, n_shards, r)
-    prop = make_distributed_propagate(mesh, rows, n_shards)
-    srcj, dstj, cfj = (jnp.asarray(a) for a in (src, dst, cf))
-    out = [jnp.asarray(x)]
-    for _ in range(k):
-        out.append(prop(srcj, dstj, cfj, out[-1]))
-    return out
+def distributed_series(mesh, g: Graph, k: int, r: float = 0.5,
+                       spmm_impl: str = "segment", *,
+                       interpret: bool = True, nb_bucket=None,
+                       s_bucket=None, tb_bucket=None):
+    """[X^(0..k)] computed with the sharded backend step; host-verifiable
+    against `repro.gnn.graph.propagated_series`. The mesh's ``data`` axis
+    size is the shard count (1 = single-device path)."""
+    D = int(mesh.shape["data"]) if "data" in mesh.axis_names else 1
+    be, packed = pack_graph(g, D, r, spmm_impl, nb_bucket=nb_bucket,
+                            s_bucket=s_bucket, tb_bucket=tb_bucket)
+    # t_min > t_max: the threshold sentinel stays negative on every step,
+    # so no node ever exits and the loop is pure propagation
+    nai = NAIConfig(t_s=0.0, t_min=k + 1, t_max=k)
+    sa = (step_active_blocks(packed.hop_rb, k) if be.uses_tiles else None)
+    ops = {key: jnp.asarray(v)
+           for key, v in pack_operands(be, packed, sa).items()}
+    if be.uses_dense_x_inf:
+        ops["x_inf"] = jnp.asarray(packed.x_inf)
+    _, series = run_propagation(be, nai, ops, jnp.asarray(packed.x0),
+                                packed.n_batch, interpret=interpret,
+                                mesh=mesh if D > 1 else None)
+    if D > 1:
+        series = series[:, shard_batch_perm(packed.n_batch, D), :]
+    f = g.features.shape[1]
+    return [series[ell, :g.n, :f] for ell in range(k + 1)]
 
 
 def distributed_nap_distances(mesh, x, x_inf):

@@ -24,9 +24,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.gnn.backends import get_backend, normalize_mesh, run_propagation
 from repro.gnn.graph import Graph
 from repro.gnn.models import (GNNConfig, apply_classifier,
                               classification_macs)
+from repro.gnn.packing import shard_batch_perm
 from repro.gnn.sampler import Support, sample_support
 
 
@@ -207,7 +209,7 @@ def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
                        sup_src, sup_dst, sup_coef, x0, x_inf, n_batch: int,
                        *, spmm_impl: str = "segment", ell=None,
                        step_active=None, x_inf_factors=None,
-                       interpret: bool = True):
+                       interpret: bool = True, mesh=None):
     """Compiled NAP: fori over orders with exit masks (static shapes).
 
     Returns (exit_order (nb,), stacked BATCH-ROW features
@@ -218,137 +220,75 @@ def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
     supports S is routinely 10–50× n_batch, so carrying S rows per step
     was almost entirely dead HBM traffic.
 
-    `spmm_impl` selects the propagation operator:
+    This is a thin compatibility wrapper over the `PropagationBackend`
+    registry (`repro.gnn.backends`): `spmm_impl` names a registered
+    backend — ``segment`` (jnp segment-sum over sup_src/sup_dst/sup_coef),
+    ``block_ell`` (Pallas block-ELL kernel over ``ell=(tiles, tile_col,
+    valid)`` + the static `step_active` row-block predicate from
+    `repro.gnn.packing.step_active_blocks`), or ``fused`` (one-kernel
+    SpMM + exit decision, streaming `x_inf_factors=(c, s)` instead of the
+    dense x_inf) — and the shared masked loop in
+    `repro.gnn.backends.run_propagation` drives its ``step``. Exit
+    arithmetic (squared f32 distance vs squared threshold, negative
+    threshold = gated off) is identical across backends, so exit orders
+    stay bit-consistent even for distances at the threshold.
 
-    * ``"segment"`` — jnp segment-sum over the edge list
-      (sup_src/sup_dst/sup_coef); every row is updated every step.
-    * ``"block_ell"`` — the Pallas block-ELL kernel. `ell` is the operand
-      triple ``(tiles, tile_col, valid)`` and `step_active` is the
-      (T_max, n_rb) static per-step row-block predicate from
-      `repro.gnn.packing.step_active_blocks`; it is ANDed with the dynamic
-      any-batch-node-still-active flag, so once the whole batch has exited
-      every remaining step touches zero tiles. Rows in skipped blocks read
-      as zero; by the hop argument in packing.py those values never reach
-      a batch output. The exit distance is a separate jnp reduction over
-      the propagated features (one extra HBM read per step).
-    * ``"fused"`` — the fused step kernel (repro.kernels.nap_step): SpMM
-      accumulation, exit distance, per-node exit flags and the next
-      step's per-row-block still-active predicate in one grid pass, so
-      the propagated block never round-trips through HBM between the
-      matmul and the distance check. Same operands as ``block_ell`` plus
-      `x_inf_factors=(c, s)` — the rank-1 stationary-state factors
-      (x_inf = c ⊗ s, see `support_stationary_factors`) streamed into
-      the kernel in place of the dense x_inf — and the squared threshold
-      prefetched; requires the packed layout (n_batch a multiple of RB,
-      T_min/T_max gating applied by disabling the threshold on un-gated
-      steps).
+    `mesh` (a mesh with a ``data`` axis, operands packed with
+    ``pack_support(n_shards=D)``) runs the same loop under shard_map;
+    results come back in the packed shard-major batch order (undo with
+    `repro.gnn.packing.shard_batch_perm`).
 
     Per-order classification lives in `make_compiled_infer`, which wraps
     this core in one jitted function.
     """
-    S, f = x0.shape
-    tmax = nai.t_max
-
-    if spmm_impl == "fused":
-        from repro.kernels.nap_step import nap_step_fused
-        from repro.kernels.spmm.kernel import CB, RB
-        if n_batch % RB or S % CB:
-            raise ValueError(
-                f"fused path needs packed operands: n_batch {n_batch} "
-                f"% RB, rows {S} % CB must be 0 (see repro.gnn.packing)")
+    backend = get_backend(spmm_impl)
+    ops = {}
+    if backend.uses_tiles:
+        if ell is None:
+            raise ValueError(f"{spmm_impl} path needs ell="
+                             f"(tiles, tile_col, valid)")
+        ops["tiles"], ops["tile_col"], ops["valid"] = ell
+        ops["step_active"] = jnp.asarray(step_active, jnp.int32)
+    if backend.uses_edges:
+        ops["src"], ops["dst"], ops["coef"] = sup_src, sup_dst, sup_coef
+    if backend.uses_factors:
         if x_inf_factors is None:
             raise ValueError("fused path needs x_inf_factors=(c, s), the "
                              "rank-1 stationary-state factors")
-        c_inf = jnp.asarray(x_inf_factors[0], x0.dtype).reshape(-1, 1)
-        s_inf = jnp.asarray(x_inf_factors[1], x0.dtype).reshape(1, -1)
-        if c_inf.shape[0] != n_batch or s_inf.shape[1] != f:
-            raise ValueError(f"fused path needs factors padded to "
-                             f"({n_batch},) and ({f},), got "
-                             f"{c_inf.shape} {s_inf.shape}")
-        tiles, tile_col, valid = ell
-        sa = jnp.asarray(step_active, jnp.int32)
-        ts2_val = jnp.float32(nai.t_s) ** 2
-
-        def body(l, carry):
-            x, series, exit_order, live = carry
-            active = sa[l - 1] * live
-            nact = (exit_order == 0).astype(jnp.int32)[:, None]
-            # T_min/T_max gating happens inside the kernel: a negative
-            # squared threshold on un-gated steps means nobody exits
-            ts2 = jnp.where((l >= nai.t_min) & (l < tmax),
-                            ts2_val, jnp.float32(-1.0)).reshape(1)
-            x, exits, blk_still = nap_step_fused(
-                tiles, tile_col, valid, active, x, c_inf, s_inf, nact,
-                ts2, interpret=interpret)
-            series = series.at[l].set(x[:n_batch])
-            exit_order = jnp.where(exits[:, 0] != 0, l, exit_order)
-            # the kernel already emitted next step's dynamic predicate
-            live = jnp.any(blk_still != 0).astype(jnp.int32)
-            return x, series, exit_order, live
-
-        series = jnp.zeros((tmax + 1, n_batch, f),
-                           x0.dtype).at[0].set(x0[:n_batch])
-        exit_order = jnp.zeros((n_batch,), jnp.int32)
-        _, series, exit_order, _ = jax.lax.fori_loop(
-            1, tmax + 1, body, (x0, series, exit_order, jnp.int32(1)))
-        exit_order = jnp.where(exit_order == 0, tmax, exit_order)
-        return exit_order, series
-
-    if spmm_impl == "segment":
-        def spmm(x, l, live):
-            contrib = sup_coef[:, None] * x[sup_src]
-            return jax.ops.segment_sum(contrib, sup_dst, num_segments=S)
-    elif spmm_impl == "block_ell":
-        from repro.kernels.spmm import spmm_block_ell
-        tiles, tile_col, valid = ell
-        sa = jnp.asarray(step_active, jnp.int32)
-
-        def spmm(x, l, live):
-            active = sa[l - 1] * live
-            return spmm_block_ell(tiles, tile_col, valid, active, x,
-                                  interpret=interpret)
-    else:
-        raise ValueError(f"unknown spmm_impl {spmm_impl!r}")
-
-    def body(l, carry):
-        x, series, exit_order = carry
-        live = jnp.any(exit_order == 0).astype(jnp.int32)
-        x = spmm(x, l, live)
-        series = series.at[l].set(x[:n_batch])
-        # squared comparison (not norm < t_s): the same arithmetic the
-        # fused kernel uses, so exit orders stay bit-consistent across
-        # the compiled impls even for distances at the threshold
-        d2 = jnp.sum((x[:n_batch] - x_inf) ** 2, axis=1)
-        can_exit = (exit_order == 0) & (l >= nai.t_min) & (l < tmax) \
-            & (d2 < jnp.float32(nai.t_s) ** 2)
-        exit_order = jnp.where(can_exit, l, exit_order)
-        return x, series, exit_order
-
-    series = jnp.zeros((tmax + 1, n_batch, f),
-                       x0.dtype).at[0].set(x0[:n_batch])
-    exit_order = jnp.zeros((n_batch,), jnp.int32)
-    _, series, exit_order = jax.lax.fori_loop(
-        1, tmax + 1, body, (x0, series, exit_order))
-    exit_order = jnp.where(exit_order == 0, tmax, exit_order)
-    return exit_order, series
+        ops["c_inf"] = jnp.asarray(x_inf_factors[0], x0.dtype)
+        ops["s_inf"] = jnp.asarray(x_inf_factors[1], x0.dtype)
+    if backend.uses_dense_x_inf:
+        ops["x_inf"] = x_inf
+    return run_propagation(backend, nai, ops, x0, n_batch,
+                           interpret=interpret, mesh=mesh)
 
 
 def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
                         spmm_impl: str = "block_ell",
                         interpret: bool = True,
-                        donate: Optional[bool] = None):
+                        donate: Optional[bool] = None,
+                        mesh=None):
     """One jitted function: masked NAP propagation + per-order
     classification (unrolled over orders, selected by exit mask).
 
     The returned callable takes ``(cls_params, operands, x0, x_inf)`` where
     `operands` is a dict — ``tiles/tile_col/valid/step_active`` for
     ``block_ell``, the same plus ``c_inf/s_inf`` (rank-1 stationary-state
-    factors) for ``fused``, ``src/dst/coef`` for ``segment`` — and
+    factors) for ``fused``, ``src/dst/coef`` for ``segment`` (see the
+    backend's ``operand_logical`` keys in `repro.gnn.backends`) — and
     returns ``(predictions (nb,), exit_order (nb,))``. All shape
     specialization happens through jax.jit's cache; callers bucket their
     operand shapes (repro.gnn.packing) so repeat batches hit it. The
     number of traced shapes is exposed via the jitted function's
     ``_cache_size()``.
+
+    `mesh` (any mesh with a ``data`` axis of size D > 1; operands must
+    come from ``pack_support(..., n_shards=D)``) runs the propagation
+    loop sharded under shard_map — each device owns its round-robin row
+    superblocks, the frontier is all-gathered per step — and un-permutes
+    exit orders and series back to the original batch order before
+    classification, so the returned predictions are positionally
+    identical to single-device serving.
 
     `donate` hands the per-batch operands (``operands``, ``x0``,
     ``x_inf`` — NOT the classifier params, which persist across batches)
@@ -358,9 +298,10 @@ def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
     which does not implement donation and would warn per compile. The
     effective donated argnums are exposed as ``run._donate_argnums``.
     """
-    if spmm_impl not in ("segment", "block_ell", "fused"):
-        raise ValueError(f"unknown spmm_impl {spmm_impl!r}")
+    backend = get_backend(spmm_impl)
     tmax = nai.t_max
+    mesh = normalize_mesh(mesh)
+    n_shards = int(mesh.shape["data"]) if mesh is not None else 1
     if donate is None:
         donate = jax.default_backend() != "cpu"
     donate_argnums = (1, 2, 3) if donate else ()
@@ -368,20 +309,17 @@ def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
     @functools.partial(jax.jit, donate_argnums=donate_argnums)
     def run(cls_params, operands, x0, x_inf):
         nb = x_inf.shape[0]
-        if spmm_impl in ("block_ell", "fused"):
-            factors = (operands["c_inf"], operands["s_inf"]) \
-                if spmm_impl == "fused" else None
-            exit_order, series = infer_batch_masked(
-                cfg, nai, None, None, None, None, x0, x_inf, nb,
-                spmm_impl=spmm_impl,
-                ell=(operands["tiles"], operands["tile_col"],
-                     operands["valid"]),
-                step_active=operands["step_active"],
-                x_inf_factors=factors, interpret=interpret)
-        else:
-            exit_order, series = infer_batch_masked(
-                cfg, nai, None, operands["src"], operands["dst"],
-                operands["coef"], x0, x_inf, nb, spmm_impl="segment")
+        ops = dict(operands)
+        if backend.uses_dense_x_inf:
+            ops["x_inf"] = x_inf
+        exit_order, series = run_propagation(
+            backend, nai, ops, x0, nb, interpret=interpret, mesh=mesh)
+        if n_shards > 1:
+            # shard-major packed order -> original batch order (a static
+            # gather; shard_batch_perm[r] is where batch row r landed)
+            unperm = shard_batch_perm(nb, n_shards)
+            exit_order = exit_order[unperm]
+            series = series[:, unperm, :]
         preds = jnp.zeros((nb,), jnp.int32)
         for l in range(1, tmax + 1):
             # series already carries batch rows only (nb == series.shape[1])

@@ -24,6 +24,24 @@ X^(l) at a node of hop h can only reach a batch output if h <= T_max - l,
 so row blocks with `hop_rb > T_max - l` are skipped by the kernel at step
 l (and everything is skipped once the whole batch has exited — the
 dynamic part, ANDed in inside the jitted function).
+
+Sharded packing (``n_shards=D > 1``, consumed by
+`repro.gnn.backends.run_propagation` under shard_map): the padded rows
+are PERMUTED into shard-major order — CB-row superblocks dealt
+round-robin across shards (superblock j -> shard j % D), each shard's
+blocks concatenated — so a plain contiguous `PartitionSpec("data")` slice
+of every operand hands each shard exactly its round-robin blocks with
+identical static shapes. The permutation granularity is deliberately CB
+(the SpMM kernel's x-blocking): whole column blocks move, so every
+coefficient tile keeps its single-device contents, per-row-block slot
+order, and within-tile layout — sharded SpMM is bit-identical to
+single-device, not just close. Alignment prices of sharding: the batch
+region pads to a multiple of CB*D (each shard must own the same number of
+leading batch superblocks) and the total rows to a multiple of CB*D; the
+batch therefore has to amortize CB*D rows (the paper's batch 500 on 4
+shards pads to 512 — 2% — but tiny batches on many shards pay real
+padding). Batch rows land permuted too: `shard_batch_perm` maps original
+batch position -> packed position, and results gather back through it.
 """
 from __future__ import annotations
 
@@ -50,6 +68,45 @@ def next_bucket(x: int, minimum: int = 1) -> int:
         b *= 2
 
 
+def batch_bucket(n_batch: int, n_shards: int = 1) -> int:
+    """Bucketed batch-region size: RB-aligned single-device, CB*D-aligned
+    sharded (every shard must own the same number of leading batch
+    superblocks)."""
+    return next_bucket(n_batch, RB if n_shards == 1 else CB * n_shards)
+
+
+def shard_block_perm(n_blocks: int, n_shards: int) -> np.ndarray:
+    """Shard-major round-robin permutation of CB superblocks: block j
+    goes to shard j % D at local slot j // D, i.e. packed position
+    (j % D) * (n_blocks // D) + j // D. Requires n_blocks % D == 0."""
+    if n_blocks % n_shards:
+        raise ValueError(f"{n_blocks} superblocks not divisible by "
+                         f"{n_shards} shards")
+    j = np.arange(n_blocks, dtype=np.int64)
+    return (j % n_shards) * (n_blocks // n_shards) + j // n_shards
+
+
+def shard_row_perm(n_rows: int, n_shards: int) -> np.ndarray:
+    """Per-row packed position under the superblock round-robin (rows
+    move with their CB superblock; within-block offsets are preserved,
+    which is what keeps tile contents bit-identical)."""
+    if n_rows % (CB * n_shards):
+        raise ValueError(f"{n_rows} rows not a multiple of CB*D = "
+                         f"{CB * n_shards}")
+    r = np.arange(n_rows, dtype=np.int64)
+    return shard_block_perm(n_rows // CB, n_shards)[r // CB] * CB + r % CB
+
+
+def shard_batch_perm(n_batch: int, n_shards: int) -> np.ndarray:
+    """Packed position of each original batch row inside the (n_batch,)
+    batch-region arrays (x_inf, c_inf, exit orders, series rows). Same
+    round-robin formula restricted to the batch region: batch superblocks
+    are globally first and round-robin preserves relative order, so they
+    are the FIRST nb/(CB*D) superblocks of every shard in both the full
+    row space and the batch-only space."""
+    return shard_row_perm(n_batch, n_shards)
+
+
 @dataclasses.dataclass
 class PackedSupport:
     # block-ELL operands (see repro.kernels.spmm.kernel.spmm_block_ell)
@@ -66,7 +123,10 @@ class PackedSupport:
     x0: np.ndarray           # (n_pad, f_pad) f32 features at support rows
     x_inf: np.ndarray        # (n_batch, f_pad) f32 stationary state
     # bucket-padded edge list in padded row ids (for the segment-sum
-    # compiled path; pad edges have coef 0 so they contribute nothing)
+    # compiled path; pad edges have coef 0 so they contribute nothing).
+    # Sharded (n_shards > 1) the arrays carry a leading shard axis
+    # (D, e_pad): src holds PACKED global row ids (indexes the gathered
+    # frontier), dst holds shard-LOCAL row ids.
     src: np.ndarray          # (e_pad,) int32
     dst: np.ndarray          # (e_pad,) int32
     coef: np.ndarray         # (e_pad,) f32
@@ -78,6 +138,9 @@ class PackedSupport:
     # True when pack_support refilled a caller-provided buffer set in
     # place instead of allocating (the steady-state serving path)
     reused: bool = False
+    # row partition over the serving mesh's data axis (1 = unsharded);
+    # sharded operands are in shard-major superblock-permuted row order
+    n_shards: int = 1
 
     @property
     def n_rb(self) -> int:
@@ -95,12 +158,14 @@ class PackedSupport:
         fused kernel additionally prefetches `x_inf` (already bucketed to
         (n_batch, f_pad) here) and the squared threshold (a scalar, no
         shape) — but they compile different programs, so the impl name
-        stays in the key."""
+        stays in the key. `n_shards` is in the key because the sharded
+        runner compiles a different (shard_map) program even at equal
+        operand shapes."""
         if spmm_impl in ("block_ell", "fused"):
-            return (spmm_impl, self.n_batch, self.n_pad,
+            return (spmm_impl, self.n_shards, self.n_batch, self.n_pad,
                     self.tiles.shape[1], self.x0.shape[1])
-        return ("segment", self.n_batch, self.n_pad, self.x0.shape[1],
-                len(self.src))
+        return ("segment", self.n_shards, self.n_batch, self.n_pad,
+                self.x0.shape[1], self.src.shape[-1])
 
 
 def _remap_rows(sup: Support, nb_bucket: int) -> np.ndarray:
@@ -119,7 +184,8 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
                  build_tiles: bool = True,
                  build_edges: bool = True,
                  x_inf_factors=None,
-                 out: Optional[PackedSupport] = None) -> PackedSupport:
+                 out: Optional[PackedSupport] = None,
+                 n_shards: int = 1) -> PackedSupport:
     """Pack a sampled `Support` (+ its features and per-batch-node
     stationary state) into bucket-padded block-ELL operands.
 
@@ -151,13 +217,27 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
     O(S)/O(E) scratch (row maps, the tile unique pass) still allocates.
     Callers overlapping host packing with async device compute must
     rotate >= 2 buffer sets so an in-flight batch's operands are never
-    overwritten (see NAIServingEngine)."""
-    if s_bucket and s_bucket % CB:
-        raise ValueError(f"s_bucket {s_bucket} not a CB multiple")
+    overwritten (see NAIServingEngine).
+
+    `n_shards=D > 1` emits the same operand set in the shard-major
+    superblock-permuted row order (see the module docstring): equal
+    static shapes per shard, tiles bit-identical to a single-device pack
+    of the same geometry, edge arrays stacked (D, e_pad) with local dst
+    ids. Explicit buckets must respect the sharded alignment (batch and
+    rows multiples of CB*D)."""
+    row_align = CB * n_shards
+    batch_align = RB if n_shards == 1 else CB * n_shards
+    if s_bucket and s_bucket % row_align:
+        raise ValueError(f"s_bucket {s_bucket} not a multiple of "
+                         f"{row_align} (CB * n_shards)")
     nb, S = sup.n_batch, len(sup)
-    nb_bucket = max(next_bucket(nb, RB), nb_bucket or 0)
+    nb_bucket = max(batch_bucket(nb, n_shards), nb_bucket or 0)
+    if nb_bucket % batch_align:
+        raise ValueError(f"nb_bucket {nb_bucket} not a multiple of "
+                         f"{batch_align}")
     rows_needed = nb_bucket + (S - nb)
-    n_pad = max(next_bucket(-(-rows_needed // CB), 1) * CB, s_bucket or 0)
+    n_pad = max(next_bucket(-(-rows_needed // row_align), 1) * row_align,
+                s_bucket or 0)
 
     row_of = _remap_rows(sup, nb_bucket)
     src = row_of[sup.src]
@@ -166,6 +246,20 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
     # --- tile geometry (needed up front so buffer reuse can be decided
     # before anything is written)
     n_rb, n_cb = n_pad // RB, n_pad // CB
+    if n_shards > 1:
+        # shard-major permutations at every granularity; tile KEYS stay in
+        # original coordinates so slot order (and hence accumulation
+        # order) matches the single-device pack exactly
+        sb_perm = shard_block_perm(n_cb, n_shards)
+        spb = CB // RB
+        rb_ids = np.arange(n_rb, dtype=np.int64)
+        rb_perm = sb_perm[rb_ids // spb] * spb + rb_ids % spb
+        row_perm = shard_row_perm(n_pad, n_shards)
+        bat_perm = shard_batch_perm(nb_bucket, n_shards)
+        row_dest = row_perm[row_of]
+        rows_loc = n_pad // n_shards
+    else:
+        row_dest = row_of
     if build_tiles:
         rb = dst // RB
         cb = src // CB
@@ -180,14 +274,25 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
         tb = 0
     f_pad = -(-x0.shape[1] // FB) * FB
     xi_cols = f_pad if x_inf.shape[1] else 0
-    e_pad = (max(next_bucket(len(src), 1), e_bucket or 0)
-             if build_edges else 0)
+    if build_edges:
+        if n_shards > 1:
+            e_shard = row_perm[dst] // rows_loc
+            e_counts = np.bincount(e_shard, minlength=n_shards)
+            e_pad = max(next_bucket(max(int(e_counts.max()), 1), 1),
+                        e_bucket or 0)
+        else:
+            e_pad = max(next_bucket(len(src), 1), e_bucket or 0)
+    else:
+        e_pad = 0
+    e_shape = ((n_shards, e_pad) if n_shards > 1 and build_edges
+               else (e_pad,))
 
     reuse = (out is not None
+             and out.n_shards == n_shards
              and out.tiles.shape == (n_rb, tb, RB, CB)
              and out.x0.shape == (n_pad, f_pad)
              and out.x_inf.shape == (nb_bucket, xi_cols)
-             and len(out.src) == e_pad
+             and out.src.shape == e_shape
              and (out.c_inf is not None) == (x_inf_factors is not None))
     if reuse:
         p = out
@@ -205,14 +310,16 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
             n_batch=nb_bucket, nb_real=nb, n_pad=n_pad, s_real=S,
             x0=np.zeros((n_pad, f_pad), np.float32),
             x_inf=np.zeros((nb_bucket, xi_cols), np.float32),
-            src=np.full(e_pad, 0, np.int32),
-            dst=np.full(e_pad, 0, np.int32),
-            coef=np.zeros(e_pad, np.float32),
+            src=np.full(e_shape, 0, np.int32),
+            dst=np.full(e_shape, 0, np.int32),
+            coef=np.zeros(e_shape, np.float32),
             c_inf=(np.zeros(nb_bucket, np.float32)
                    if x_inf_factors is not None else None),
             s_inf=(np.zeros(f_pad, np.float32)
-                   if x_inf_factors is not None else None))
+                   if x_inf_factors is not None else None),
+            n_shards=n_shards)
     p.n_batch, p.nb_real, p.n_pad, p.s_real = nb_bucket, nb, n_pad, S
+    p.n_shards = n_shards
     p.reused = reuse
 
     # --- vectorized block-ELL build (cf. repro.kernels.spmm.ops, which
@@ -222,39 +329,70 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
         # so tiles of one rb are contiguous and column-sorted
         first_of_rb = np.concatenate([[0], np.cumsum(counts)[:-1]])
         slot = np.arange(len(uniq), dtype=np.int64) - first_of_rb[tile_rb]
-        p.tile_col[tile_rb, slot] = tile_cb
-        p.valid[tile_rb, slot] = 1
-        np.add.at(p.tiles, (rb, slot[inverse], dst % RB, src % CB),
-                  sup.coef)
+        if n_shards > 1:
+            # same tiles, same slots — only the row-block axis moves to
+            # its shard position and column ids map to packed superblocks
+            p.tile_col[rb_perm[tile_rb], slot] = \
+                sb_perm[tile_cb].astype(np.int32)
+            p.valid[rb_perm[tile_rb], slot] = 1
+            np.add.at(p.tiles, (rb_perm[rb], slot[inverse], dst % RB,
+                                src % CB), sup.coef)
+        else:
+            p.tile_col[tile_rb, slot] = tile_cb
+            p.valid[tile_rb, slot] = 1
+            np.add.at(p.tiles, (rb, slot[inverse], dst % RB, src % CB),
+                      sup.coef)
 
     # --- per-row hop -> per-row-block min hop; the (n_pad,) scratch is
     # KB-scale and the vectorized scatter + reshape-min beats a buffered
     # ufunc.at by an order of magnitude on large supports
     hop_row = np.full(n_pad, _INF_HOP, np.int32)
-    hop_row[row_of] = sup.hop
+    hop_row[row_dest] = sup.hop
     p.hop_rb[:] = hop_row.reshape(n_rb, RB).min(axis=1)
 
-    p.x0[row_of, :x0.shape[1]] = np.asarray(x0, np.float32)
+    p.x0[row_dest, :x0.shape[1]] = np.asarray(x0, np.float32)
     # a zero-column x_inf means the caller only needs the batch-row count
     # (fused path: the kernel streams the rank-1 factors instead)
-    p.x_inf[:nb, :x_inf.shape[1]] = x_inf
+    if n_shards > 1:
+        p.x_inf[bat_perm[:nb], :x_inf.shape[1]] = x_inf
+    else:
+        p.x_inf[:nb, :x_inf.shape[1]] = x_inf
 
     if x_inf_factors is not None:
         c, s = x_inf_factors
         p.c_inf.fill(0.0)
-        p.c_inf[:nb] = np.asarray(c, np.float32)
+        if n_shards > 1:
+            p.c_inf[bat_perm[:nb]] = np.asarray(c, np.float32)
+        else:
+            p.c_inf[:nb] = np.asarray(c, np.float32)
         p.s_inf.fill(0.0)
         p.s_inf[:len(s)] = np.asarray(s, np.float32)
 
     # bucket-padded edge list (segment-sum path): pad with zero-coef
     # self-edges on the last (always padding or hop-max) row
     if build_edges:
-        p.src.fill(n_pad - 1)
-        p.dst.fill(n_pad - 1)
-        p.coef.fill(0.0)
-        p.src[:len(src)] = src
-        p.dst[:len(dst)] = dst
-        p.coef[:len(sup.coef)] = sup.coef
+        if n_shards > 1:
+            src_p = row_perm[src]
+            dst_p = row_perm[dst]
+            p.src.fill(n_pad - 1)
+            p.dst.fill(rows_loc - 1)
+            p.coef.fill(0.0)
+            # per-shard slices keep the ORIGINAL edge order (all of one
+            # row's contributions live in one shard), so segment-sum
+            # accumulates each row in the single-device order
+            for sh in range(n_shards):
+                m = e_shard == sh
+                k = int(e_counts[sh])
+                p.src[sh, :k] = src_p[m].astype(np.int32)
+                p.dst[sh, :k] = (dst_p[m] - sh * rows_loc).astype(np.int32)
+                p.coef[sh, :k] = sup.coef[m]
+        else:
+            p.src.fill(n_pad - 1)
+            p.dst.fill(n_pad - 1)
+            p.coef.fill(0.0)
+            p.src[:len(src)] = src
+            p.dst[:len(dst)] = dst
+            p.coef[:len(sup.coef)] = sup.coef
     return p
 
 

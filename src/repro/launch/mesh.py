@@ -22,3 +22,18 @@ def make_debug_mesh(n_devices: int = 1):
     return jax.sharding.Mesh(
         __import__("numpy").array(dev).reshape(1, len(dev)),
         ("data", "model"))
+
+
+def make_serving_mesh(n_data: int = 0):
+    """1-D ``('data',)`` mesh over the first `n_data` devices (all
+    devices when 0) — the GNN serving engine's row-sharding mesh: packed
+    support rows partition over ``data`` (repro.gnn.backends), features
+    stay unsharded. Raises when fewer than `n_data` devices exist —
+    silently serving fewer shards than asked for would defeat the
+    memory-capacity reason to shard."""
+    avail = jax.devices()
+    if n_data > len(avail):
+        raise ValueError(f"make_serving_mesh({n_data}): only "
+                         f"{len(avail)} devices available")
+    dev = avail[:n_data] if n_data else avail
+    return jax.sharding.Mesh(__import__("numpy").array(dev), ("data",))

@@ -40,14 +40,32 @@ Two serving modes:
   bucket, so a buffer refilled by the host stage is never one an
   in-flight batch still reads.
 
-Compiled-mode `spmm_impl` selects the propagation operator per step:
-``"segment"`` (jnp segment-sum), ``"block_ell"`` (Pallas SpMM kernel +
-separate jnp exit distance), or ``"fused"`` (one Pallas kernel doing the
-SpMM, the exit distance, and the next step's row-block predicate in a
-single grid pass — no HBM round trip between matmul and distance check).
-The jitted runner donates its per-batch operand buffers on backends that
-implement donation (see `make_compiled_infer`), so bucketed repeat
-batches reuse HBM instead of growing the footprint.
+Compiled-mode `spmm_impl` names a registered `PropagationBackend`
+(`repro.gnn.backends`): ``"segment"`` (jnp segment-sum), ``"block_ell"``
+(Pallas SpMM kernel + separate jnp exit distance), or ``"fused"`` (one
+Pallas kernel doing the SpMM, the exit distance, and the next step's
+row-block predicate in a single grid pass — no HBM round trip between
+matmul and distance check). The backend's declared needs drive both
+stages — which operands the host stage packs and which arrays the device
+stage ships — so adding an implementation is one registry entry, not
+three new dispatch branches. The jitted runner donates its per-batch
+operand buffers on backends that implement donation (see
+`make_compiled_infer`), so bucketed repeat batches reuse HBM instead of
+growing the footprint.
+
+``mesh=`` (any mesh with a ``data`` axis, e.g.
+`repro.launch.mesh.make_serving_mesh`) turns on **sharded serving**: the
+host stage packs row-partitioned shards (`pack_support(n_shards=D)` —
+same static shapes per shard, shard-major superblock round-robin), the
+device stage places each operand with its backend-declared
+NamedSharding, and the jitted runner executes the NAP loop under
+shard_map (frontier all-gathered over ``data`` per step, live flag
+psum-reduced) before un-permuting results to the original batch order.
+Supports larger than one device's memory split their packed tiles and
+rows across the mesh; predictions and exit orders are bit-identical to
+single-device serving, and the pipeline/pool/bucketing machinery is
+unchanged (zero steady-state compiles and pack allocations still hold
+per shard count).
 """
 from __future__ import annotations
 
@@ -56,17 +74,21 @@ import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import NamedSharding
+
+from repro.gnn.backends import get_backend, normalize_mesh, pack_operands
 from repro.gnn.graph import Graph
 from repro.gnn.models import GNNConfig
 from repro.gnn.nai import (NAIConfig, infer_batch_host, make_compiled_infer,
                            support_stationary_factors)
-from repro.gnn.packing import (PackedSupport, next_bucket, pack_support,
+from repro.gnn.packing import (PackedSupport, batch_bucket, pack_support,
                                step_active_blocks)
 from repro.gnn.sampler import sample_support
-from repro.kernels.spmm.kernel import RB
+from repro.sharding.logical import spec
 
 
 @dataclasses.dataclass
@@ -153,7 +175,7 @@ class NAIServingEngine:
                  *, max_wait_s: float = 0.01, mode: str = "host",
                  spmm_impl: str = "block_ell", interpret: bool = True,
                  pipeline_depth: int = 1, donate: Optional[bool] = None,
-                 latency_window: int = 4096):
+                 latency_window: int = 4096, mesh=None):
         if mode not in ("host", "compiled"):
             raise ValueError(f"unknown mode {mode!r}")
         if pipeline_depth < 1:
@@ -162,6 +184,11 @@ class NAIServingEngine:
         if pipeline_depth > 1 and mode != "compiled":
             raise ValueError("pipelining overlaps host pack with device "
                              "compute; mode='host' has no device stage")
+        if mesh is not None:
+            if mode != "compiled":
+                raise ValueError("sharded serving (mesh=) requires "
+                                 "mode='compiled'")
+            mesh = normalize_mesh(mesh)
         self.cfg = cfg
         self.nai = nai
         self.params = params
@@ -169,6 +196,8 @@ class NAIServingEngine:
         self.max_wait_s = max_wait_s
         self.mode = mode
         self.spmm_impl = spmm_impl
+        self.mesh = mesh
+        self.n_shards = int(mesh.shape["data"]) if mesh is not None else 1
         self.pipeline_depth = pipeline_depth
         self.queue: Deque[Request] = deque()
         self.stats = EngineStats(latencies=LatencyRing(latency_window))
@@ -185,10 +214,24 @@ class NAIServingEngine:
         # rotating pack-buffer pool: bucket -> pipeline_depth + 1 slots
         self._pack_pool: Dict[int, List[Optional[PackedSupport]]] = {}
         self._pool_idx: Dict[int, int] = {}
+        self._backend = None
+        self._shardings = None
         if mode == "compiled":
+            self._backend = get_backend(spmm_impl)
+            if self.mesh is not None:
+                # backend, mesh, and operand keys are fixed for the
+                # engine's lifetime — build the per-operand NamedShardings
+                # once, off the per-batch dispatch path
+                logical = dict(self._backend.operand_logical,
+                               x0=("row_shard", None),
+                               x_inf=("row_shard", None))
+                self._shardings = {
+                    name: NamedSharding(self.mesh,
+                                        spec(*dims, mesh=self.mesh))
+                    for name, dims in logical.items()}
             self._runner = make_compiled_infer(
                 cfg, nai, spmm_impl=spmm_impl, interpret=interpret,
-                donate=donate)
+                donate=donate, mesh=self.mesh)
             self._cls_params = {
                 l: {k: jnp.asarray(v) for k, v in p.items()}
                 for l, p in params["cls"].items()}
@@ -212,6 +255,7 @@ class NAIServingEngine:
         impls. `nodes` must be duplicate-free. Pure host work — no jax
         calls."""
         g, cfg, nai = self.graph, self.cfg, self.nai
+        be = self._backend
         sup = sample_support(g, nodes, nai.t_max, cfg.r)
         nb = sup.n_batch
         x0 = g.features[sup.nodes].astype(np.float32)
@@ -223,12 +267,12 @@ class NAIServingEngine:
         c_inf, s_inf = support_stationary_factors(g, sup, x0, cfg.r)
         c_inf = c_inf.astype(np.float32)
         s_inf = s_inf.astype(np.float32)
-        if self.spmm_impl == "fused":
-            x_inf = np.zeros((nb, 0), np.float32)
-        else:
+        if be.uses_dense_x_inf:
             x_inf = c_inf[:, None] * s_inf[None, :]
+        else:
+            x_inf = np.zeros((nb, 0), np.float32)
 
-        nb_bucket = next_bucket(nb, RB)
+        nb_bucket = batch_bucket(nb, self.n_shards)
         hwm = self._bucket_hwm.get(nb_bucket, (0, 0, 0))
         slots = self._pack_pool.setdefault(
             nb_bucket, [None] * (self.pipeline_depth + 1))
@@ -236,18 +280,17 @@ class NAIServingEngine:
         packed = pack_support(sup, x0, x_inf, nb_bucket=nb_bucket,
                               s_bucket=hwm[0], tb_bucket=hwm[1],
                               e_bucket=hwm[2],
-                              build_tiles=self.spmm_impl in ("block_ell",
-                                                             "fused"),
-                              build_edges=self.spmm_impl == "segment",
+                              build_tiles=be.uses_tiles,
+                              build_edges=be.uses_edges,
                               x_inf_factors=(c_inf, s_inf)
-                              if self.spmm_impl == "fused" else None,
-                              out=slots[idx])
+                              if be.uses_factors else None,
+                              out=slots[idx], n_shards=self.n_shards)
         slots[idx] = packed
         self._pool_idx[nb_bucket] = (idx + 1) % len(slots)
         self.pack_stats["reuses" if packed.reused else "allocs"] += 1
         self._bucket_hwm[nb_bucket] = (
             max(hwm[0], packed.n_pad), max(hwm[1], packed.tiles.shape[1]),
-            max(hwm[2], len(packed.src)))
+            max(hwm[2], packed.src.shape[-1]))
 
         key = packed.shape_key(self.spmm_impl)
         if key in self._seen_keys:
@@ -256,8 +299,7 @@ class NAIServingEngine:
             self._seen_keys.add(key)
             self.jit_stats["compiles"] += 1
         step_active = (step_active_blocks(packed.hop_rb, nai.t_max)
-                       if self.spmm_impl in ("block_ell", "fused")
-                       else None)
+                       if be.uses_tiles else None)
         return packed, step_active
 
     # ----------------------------------------------------- device stage
@@ -266,24 +308,28 @@ class NAIServingEngine:
         """Transfer operands and dispatch the jitted runner. Returns
         device futures (predictions, exit orders) WITHOUT blocking —
         jax dispatch is asynchronous, so host work for the next batch can
-        proceed while the device computes."""
-        if self.spmm_impl in ("block_ell", "fused"):
-            operands = {
-                "tiles": jnp.asarray(packed.tiles),
-                "tile_col": jnp.asarray(packed.tile_col),
-                "valid": jnp.asarray(packed.valid),
-                "step_active": jnp.asarray(step_active),
-            }
-            if self.spmm_impl == "fused":
-                operands["c_inf"] = jnp.asarray(packed.c_inf)
-                operands["s_inf"] = jnp.asarray(packed.s_inf)
+        proceed while the device computes.
+
+        Operand construction is backend-driven (`pack_operands`): no
+        per-impl branches. Sharded (mesh set), every operand is placed
+        with its backend-declared NamedSharding, so each device receives
+        only its row shard — the point at which a support larger than one
+        device's memory becomes servable."""
+        operands = pack_operands(self._backend, packed, step_active)
+        if self.mesh is not None:
+            sh = self._shardings
+
+            def put(name, a):
+                return jax.device_put(np.asarray(a), sh[name])
+
+            operands = {k: put(k, v) for k, v in operands.items()}
+            x0 = put("x0", packed.x0)
+            x_inf = put("x_inf", packed.x_inf)
         else:
-            operands = {"src": jnp.asarray(packed.src),
-                        "dst": jnp.asarray(packed.dst),
-                        "coef": jnp.asarray(packed.coef)}
-        return self._runner(self._cls_params, operands,
-                            jnp.asarray(packed.x0),
-                            jnp.asarray(packed.x_inf))
+            operands = {k: jnp.asarray(v) for k, v in operands.items()}
+            x0 = jnp.asarray(packed.x0)
+            x_inf = jnp.asarray(packed.x_inf)
+        return self._runner(self._cls_params, operands, x0, x_inf)
 
     def _finalize_oldest(self) -> List[Request]:
         """Sync the oldest in-flight batch (block on its device results)

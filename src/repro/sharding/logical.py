@@ -45,6 +45,9 @@ DEFAULT_RULES: dict[str, Tuple[str, ...]] = {
     "nodes":    ("pod", "data"),
     "feature":  ("model",),
     "classes":  (),
+    # packed serving operands: support/batch rows partitioned by CB
+    # superblock over the data axis (repro.gnn.backends / repro.gnn.packing)
+    "row_shard": ("data",),
 }
 
 

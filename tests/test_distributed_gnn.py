@@ -1,5 +1,12 @@
-"""Distributed propagation (shard_map) vs the host SpMM, on a small faked
-multi-device mesh (this file forces 8 host devices; keep it isolated)."""
+"""Backend-based sharded propagation vs the host series, on a small faked
+multi-device mesh (this file forces 8 host devices; keep it isolated).
+
+The retired dense shard_map SpMM's numeric oracle survives: every
+registered PropagationBackend, run sharded over the mesh's data axis via
+`distributed_series`, must reproduce `propagated_series` on the host.
+On top of that the sharded runs must be BIT-identical to a single-device
+run of the same packed geometry (the superblock round-robin partition
+preserves tile contents and accumulation order exactly)."""
 import os
 import subprocess
 import sys
@@ -12,27 +19,52 @@ import sys
 sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
 from repro.gnn import load_dataset, propagated_series
+from repro.gnn.backends import BACKENDS
 from repro.gnn.distributed import (distributed_nap_distances,
-                                   distributed_series, partition_graph)
+                                   distributed_series, pack_graph)
 
-# jax 0.4.x: no axis_types / set_mesh — the helpers take the mesh
-# explicitly, so no ambient-mesh context is needed
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 g = load_dataset("pubmed-like", scale=0.02, seed=0)
 k = 3
 host = propagated_series(g, g.features, k)
-dist = distributed_series(mesh, g, k)
-for l in range(k + 1):
-    d = np.asarray(dist[l])[:g.n]
-    err = np.abs(d - host[l]).max()
-    assert err < 2e-3, (l, err)
 
-# NAP distance helper agrees with numpy
-x = np.asarray(dist[k])
-xi = np.zeros_like(x)
-dd = np.asarray(distributed_nap_distances(mesh, jnp.asarray(x), jnp.asarray(xi)))
+# pin the packing geometry of the widest shard count so every run
+# (including single-device) packs bit-identical tiles
+_, ref_packed = pack_graph(g, 4, spmm_impl="block_ell")
+geom = dict(nb_bucket=ref_packed.n_batch, s_bucket=ref_packed.n_pad,
+            tb_bucket=ref_packed.tiles.shape[1])
+
+# numeric oracle (inherited from the dense path): every backend, sharded,
+# agrees with the host propagation series
+by_impl = {}
+for impl in sorted(BACKENDS):
+    dist = distributed_series(mesh, g, k, spmm_impl=impl, **geom)
+    by_impl[impl] = [np.asarray(d) for d in dist]
+    for l in range(k + 1):
+        err = np.abs(by_impl[impl][l] - host[l]).max()
+        assert err < 2e-3, (impl, l, err)
+
+# bit-parity oracle: 4-shard == 2-shard == single-device, same geometry
+mesh2 = jax.make_mesh((2, 2), ("data", "model"))
+mesh1 = jax.make_mesh((1, 2), ("data", "model"))
+for impl in ("block_ell", "fused", "segment"):
+    d4 = by_impl[impl]
+    for m in (mesh2, mesh1):
+        dm = distributed_series(m, g, k, spmm_impl=impl, **geom)
+        for l in range(k + 1):
+            assert np.array_equal(np.asarray(dm[l]), d4[l]), \
+                (impl, m.shape, l)
+
+# NAP distance helper (feature-axis psum) agrees with numpy (rows padded
+# to the data axis; the series is returned unpadded)
+x = by_impl["segment"][k]
+n_pad = -(-g.n // 4) * 4
+xp = np.zeros((n_pad, x.shape[1]), np.float32)
+xp[:g.n] = x
+dd = np.asarray(distributed_nap_distances(mesh, jnp.asarray(xp),
+                                          jnp.asarray(np.zeros_like(xp))))
 ref = np.linalg.norm(x, axis=1)
-assert np.abs(dd - ref).max() < 2e-2, np.abs(dd - ref).max()
+assert np.abs(dd[:g.n] - ref).max() < 2e-2, np.abs(dd[:g.n] - ref).max()
 print("DISTRIBUTED_OK")
 """
 

@@ -1,0 +1,96 @@
+"""Sharded serving acceptance: pipelined × sharded must equal serial ×
+single-device — identical completion order, predictions, and exit orders
+for every registered backend at multiple shard counts — with zero
+steady-state jit compiles and zero steady-state pack allocations. Runs
+in a subprocess that forces 8 host devices (keep it isolated)."""
+import os
+import subprocess
+import sys
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import dataclasses
+import jax, numpy as np
+from repro.gnn import GNNConfig, init_classifiers, load_dataset
+from repro.gnn.nai import NAIConfig
+from repro.launch.mesh import make_serving_mesh
+from repro.serving import NAIServingEngine
+
+g = load_dataset("pubmed-like", scale=0.02, seed=4)
+g = dataclasses.replace(g, features=np.ascontiguousarray(g.features[:, :64]))
+cfg = GNNConfig("sgc", 64, g.num_classes, k=2, hidden=32, mlp_layers=2)
+params = {"cls": init_classifiers(cfg, jax.random.PRNGKey(0))}
+nai = NAIConfig(t_s=6.0, t_min=1, t_max=2, batch_size=32)
+rng = np.random.default_rng(0)
+stream = [rng.choice(g.test_idx, size=s, replace=False)
+          for s in (32, 30, 32, 28)]
+
+def serve(eng):
+    done = []
+    for nodes in stream:
+        eng.submit(nodes)
+        done += eng.step()
+    done += eng.flush()
+    return (np.array([r.node_id for r in done]),
+            np.array([r.prediction for r in done]),
+            np.array([r.exit_order for r in done]))
+
+from repro.gnn.backends import BACKENDS
+for impl in sorted(BACKENDS):
+    base = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                            mode="compiled", spmm_impl=impl)
+    bn, bp, bo = serve(base)
+    for D in (2, 4):
+        eng = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                               mode="compiled", spmm_impl=impl,
+                               pipeline_depth=2, mesh=make_serving_mesh(D))
+        assert eng.n_shards == D
+        sn, sp, so = serve(eng)
+        assert np.array_equal(sn, bn), (impl, D)       # FIFO completion
+        assert np.array_equal(sp, bp), (impl, D)       # predictions
+        assert np.array_equal(so, bo), (impl, D)       # exit orders
+        assert not eng._inflight
+        serve(eng)                                     # pool converges
+        c0, a0 = eng.jit_stats["compiles"], eng.pack_stats["allocs"]
+        serve(eng)                                     # steady state
+        assert eng.jit_stats["compiles"] == c0, (impl, D, eng.jit_stats)
+        assert eng.pack_stats["allocs"] == a0, (impl, D, eng.pack_stats)
+        assert eng.jit_cache_size() == c0, (impl, D)
+
+# a degenerate 1-device mesh falls back to the plain single-device path
+eng1 = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                        mode="compiled", spmm_impl="segment",
+                        mesh=make_serving_mesh(1))
+assert eng1.mesh is None and eng1.n_shards == 1
+n1, p1, o1 = serve(eng1)
+
+# mesh validation: host mode and data-axis-free meshes are rejected
+import numpy as _np
+from jax.sharding import Mesh
+try:
+    NAIServingEngine(cfg, nai, params, g, mode="host",
+                     mesh=make_serving_mesh(2))
+    raise SystemExit("host+mesh should have raised")
+except ValueError:
+    pass
+try:
+    NAIServingEngine(cfg, nai, params, g, mode="compiled",
+                     mesh=Mesh(_np.array(jax.devices()[:2]), ("model",)))
+    raise SystemExit("mesh without data axis should have raised")
+except ValueError:
+    pass
+print("SHARDED_SERVING_OK")
+"""
+
+
+def test_sharded_serving_parity_and_steady_state():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], cwd=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), env=env,
+        capture_output=True, text=True, timeout=600)
+    assert "SHARDED_SERVING_OK" in out.stdout, out.stdout + out.stderr
