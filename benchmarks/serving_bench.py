@@ -24,6 +24,17 @@ README "Sharded serving"): the n_shards / steady-compile / pack-alloc
 columns are the structural guarantee — a sharded engine must report one
 shard per device and keep the zero-steady-state invariants — while
 host-platform device timings share physical cores and are trend-only.
+Sharded rows also carry the halo-exchange structural columns:
+
+* ``gather_rows_per_step`` — frontier rows each shard materializes per
+  NAP step (the bucket-padded halo frame H_pad·CB under
+  ``gather_mode="halo"``/``"alltoall"``; the full S_pad under the dense
+  reference row);
+* ``halo_rows`` / ``halo_frac`` — the true boundary (widest shard's
+  real halo entries · CB) and its fraction of S_pad. ``--check`` fails
+  when a halo-mode row at D >= 2 reports ``halo_frac == 1.0`` (the halo
+  path silently degenerated to the dense exchange) or a frame larger
+  than the dense frontier.
 
 Runnable standalone::
 
@@ -105,7 +116,8 @@ def _bench_configs(g, cfg, params, nai, specs, stream,
     hits every configuration equally instead of whichever happened to be
     measured in a contended window. Each spec is a dict with keys
     ``mode``/``impl``/``depth`` and optionally ``devices`` (> 1 serves
-    through a ``make_serving_mesh`` row-sharded engine)."""
+    through a ``make_serving_mesh`` row-sharded engine) and ``gather``
+    (the sharded frontier exchange; engine default "halo")."""
     from repro.launch.mesh import make_serving_mesh
     from repro.serving.engine import EngineStats, LatencyRing
     engines, baselines = [], []
@@ -115,6 +127,8 @@ def _bench_configs(g, cfg, params, nai, specs, stream,
             kw.update(spmm_impl=sp["impl"], pipeline_depth=sp["depth"])
         if sp.get("devices", 1) > 1:
             kw["mesh"] = make_serving_mesh(sp["devices"])
+            if "gather" in sp:
+                kw["gather_mode"] = sp["gather"]
         eng = NAIServingEngine(cfg, nai, params, g, **kw)
         _drain(eng, stream)               # warm 1: compiles, HWM growth
         _drain(eng, stream)               # warm 2: pack pool converges
@@ -147,6 +161,10 @@ def _bench_configs(g, cfg, params, nai, specs, stream,
             "steady_compiles": eng.jit_stats["compiles"] - c0,
             "steady_pack_allocs": eng.pack_stats["allocs"] - a0,
         }
+        if eng.n_shards > 1:
+            row["gather_mode"] = eng.gather_mode
+            row.update({k: (round(v, 3) if isinstance(v, float) else v)
+                        for k, v in eng.halo_stats.items()})
         if mode == "compiled" and b["timings"]:
             for k, label in (("host_s", "host_stage_ms"),
                              ("dispatch_s", "dispatch_ms"),
@@ -162,18 +180,25 @@ def _sharded_specs(smoke: bool) -> List[Dict]:
     segment impl (1/2/4/8 — the 1-device row is the unsharded
     reference), plus the Pallas impls at the middle counts for kernel-
     path structural coverage (interpret-mode timings are emulation; the
-    structural counters are the signal). Counts are clipped to the
-    available devices — run under
+    structural counters are the signal). Sharded engines run the default
+    halo exchange; one dense-gather segment row rides along as the
+    communication-volume reference (same shapes, full-frontier
+    all_gather). Counts are clipped to the available devices — run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for the full
     sweep."""
     avail = len(jax.devices())
     seg = [d for d in ((1, 2) if smoke else (1, 2, 4, 8)) if d <= avail]
     krn = [d for d in ((2,) if smoke else (2, 4)) if d <= avail]
-    specs = [dict(mode="compiled", impl="segment", depth=2, devices=d)
+    specs = [dict(mode="compiled", impl="segment", depth=2, devices=d,
+                  gather="halo")
              for d in seg]
     for impl in ("block_ell", "fused"):
-        specs += [dict(mode="compiled", impl=impl, depth=2, devices=d)
+        specs += [dict(mode="compiled", impl=impl, depth=2, devices=d,
+                       gather="halo")
                   for d in krn]
+    if 2 <= avail:
+        specs.append(dict(mode="compiled", impl="segment", depth=2,
+                          devices=2, gather="dense"))
     return specs
 
 
@@ -282,6 +307,22 @@ def check(payload: Dict) -> List[str]:
             errs.append(f"sharded/{c['impl']}/dev{c['devices']}: engine "
                         f"reports {c['n_shards']} shards (mesh not "
                         f"threaded through)")
+        if c["devices"] < 2:
+            continue
+        tag = f"sharded/{c['impl']}/dev{c['devices']}/{c['gather_mode']}"
+        if c["gather_mode"] != "dense":
+            if c["halo_frac"] >= 1.0:
+                errs.append(f"{tag}: halo_frac == 1.0 (halo path "
+                            f"silently fell back to the dense exchange)")
+            if c["gather_rows_per_step"] > c["s_pad"]:
+                errs.append(f"{tag}: halo frame "
+                            f"{c['gather_rows_per_step']} rows exceeds "
+                            f"the dense frontier {c['s_pad']}")
+            if c["halo_rows"] > c["gather_rows_per_step"]:
+                errs.append(f"{tag}: true halo rows {c['halo_rows']} "
+                            f"exceed the gathered frame "
+                            f"{c['gather_rows_per_step']} (metadata "
+                            f"bound violated)")
     return errs
 
 
@@ -289,14 +330,21 @@ def _sharded_csv(sharded: List[Dict]) -> List[str]:
     rows = []
     for c in sharded:
         name = f"serving/sharded/{c['impl']}/dev{c['devices']}"
+        if c.get("gather_mode", "dense") != "halo" and c["devices"] > 1:
+            name += f"/{c['gather_mode']}"
         us = 1e6 / max(c["req_per_s"], 1e-9)
-        rows.append(csv_row(
-            name, us,
+        derived = (
             f"req_per_s={c['req_per_s']};p50_ms={c['p50_ms']};"
             f"p95_ms={c['p95_ms']};p99_ms={c['p99_ms']};"
             f"n_shards={c['n_shards']};"
             f"steady_compiles={c['steady_compiles']};"
-            f"steady_pack_allocs={c['steady_pack_allocs']}"))
+            f"steady_pack_allocs={c['steady_pack_allocs']}")
+        if c["devices"] > 1:
+            derived += (f";gather_mode={c['gather_mode']};"
+                        f"gather_rows_per_step={c['gather_rows_per_step']};"
+                        f"halo_rows={c['halo_rows']};"
+                        f"halo_frac={c['halo_frac']}")
+        rows.append(csv_row(name, us, derived))
     return rows
 
 

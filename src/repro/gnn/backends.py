@@ -23,18 +23,48 @@ Sharded execution (the scale story — supports larger than one device's
 HBM): `repro.gnn.packing.pack_support(n_shards=D)` splits the padded
 support rows round-robin by CB-row superblock across the ``data`` axis
 (shard-major layout, every shard the same static shapes). Each step the
-frontier features are all-gathered across node shards (`all_gather` over
-``data`` — features stay unsharded: serving feature dims are a few
-hundred, rows are the memory axis), each shard updates only the row
-blocks it owns, computes exit distances for its own batch rows, and the
-global any-batch-node-live flag is reduced with a `psum`. Because the
-packer permutes whole CB superblocks, every tile keeps its single-device
+frontier rows a shard reads are rebuilt across node shards (features
+stay unsharded: serving feature dims are a few hundred, rows are the
+memory axis), each shard updates only the row blocks it owns, computes
+exit distances for its own batch rows, and the global
+any-batch-node-live flag is reduced with a `psum`. Because the packer
+permutes whole CB superblocks, every tile keeps its single-device
 contents and in-row-block accumulation order, so sharded propagation is
 bit-identical to single-device — the parity oracle the sharded tests
 hold us to. Operand partition specs are expressed through the logical
-axis system (`repro.sharding.logical.spec`, rule ``row_shard``) so the
-same backend lowers on any mesh that names a ``data`` axis (e.g.
-`repro.launch.mesh.make_serving_mesh`).
+axis system (`repro.sharding.logical.spec`, rules ``row_shard`` /
+``halo_shard``) so the same backend lowers on any mesh that names a
+``data`` axis (e.g. `repro.launch.mesh.make_serving_mesh`).
+
+**Frontier exchange** (``gather_mode=``): a shard's tiles only read the
+CB column blocks named in its ``tile_col``, and that set is static at
+pack time, so the exchange compiles to fixed shapes:
+
+* ``"dense"`` — the PR-4 reference: `all_gather` the full (S_pad, f)
+  frontier every step; interconnect bytes scale with total support
+  size. Operands must be packed WITHOUT halo metadata (global
+  coordinates).
+* ``"halo"`` — operands packed with ``pack_support(halo=True)``: the
+  loop still all-gathers, then each shard assembles its (H_pad·CB, f)
+  halo frame with a static block gather and every backend consumes the
+  frame instead of the full frontier. Compute-side win everywhere (the
+  kernels' x operand shrinks to the true boundary); the interconnect
+  win needs the ragged exchange below.
+* ``"alltoall"`` — same halo pack; each shard sends exactly the blocks
+  its peers' frames reference via one `jax.lax.all_to_all` per step
+  (uniform (D·B_pad, CB, f) send/recv buffers from the packer's
+  per-pair send lists), so interconnect bytes scale with the true
+  boundary size instead of S_pad·D.
+
+Frame rows are bit-identical copies of the dense frontier rows and tile
+slot order never moves, so all three modes produce BIT-identical
+predictions and exit orders (tests/test_sharded_serving.py).
+
+Per-order classification also runs under shard_map when
+`run_propagation` is given a ``classify`` hook: each shard classifies
+its own batch rows and only the (nb,) argmax class ids and exit orders
+leave the sharded region — the (T_max+1, nb, f) series and (nb, C)
+logits are never replicated.
 """
 from __future__ import annotations
 
@@ -51,6 +81,31 @@ from repro.kernels.spmm.kernel import CB, RB
 from repro.sharding.logical import spec
 
 BACKENDS: Dict[str, "PropagationBackend"] = {}
+
+GATHER_MODES = ("dense", "halo", "alltoall")
+
+# halo-exchange operand specs (pack_support(halo=True) metadata): the
+# leading axis is the owning shard, so every array block-slices to its
+# shard exactly like the edge lists. These keys ride next to any
+# backend's operand_logical — the backends themselves never see them
+# (run_propagation pops them to build the frame gather).
+HALO_LOGICAL: Dict[str, tuple] = {
+    "halo_src_shard": ("halo_shard", None),
+    "halo_src_block": ("halo_shard", None),
+    "halo_send_block": ("halo_shard", None, None),
+    "halo_frame_src": ("halo_shard", None),
+}
+
+
+def operand_logical(backend: "PropagationBackend",
+                    gather_mode: str = "dense") -> Dict[str, tuple]:
+    """The backend's operand key -> logical dims table, grown with the
+    halo specs for halo gather modes — the ONE table the engine's device
+    placement and `run_propagation`'s shard_map in_specs share."""
+    table = dict(backend.operand_logical)
+    if gather_mode != "dense":
+        table.update(HALO_LOGICAL)
+    return table
 
 
 def register_backend(cls):
@@ -245,6 +300,11 @@ def pack_operands(backend: PropagationBackend, packed,
         ops.update(src=packed.src, dst=packed.dst, coef=packed.coef)
     if backend.uses_factors:
         ops.update(c_inf=packed.c_inf, s_inf=packed.s_inf)
+    if packed.halo_src_shard is not None:
+        ops.update(halo_src_shard=packed.halo_src_shard,
+                   halo_src_block=packed.halo_src_block,
+                   halo_send_block=packed.halo_send_block,
+                   halo_frame_src=packed.halo_frame_src)
     return ops
 
 
@@ -292,30 +352,92 @@ def _masked_loop(backend, nai, ops, x0, n_batch, n_rows, interpret,
     return exit_order, series
 
 
+def _halo_gather(gather_mode: str, halo: dict, rows_loc: int):
+    """Build the per-step frame-assembly `gather` from a shard's (local)
+    halo metadata. Both modes return the (H_pad*CB, f) halo frame whose
+    rows are bit-identical copies of the dense frontier rows the shard's
+    frame-local tile_col/src indices name."""
+    n_cb_loc = rows_loc // CB
+    if gather_mode == "halo":
+        # first implementation: the full frontier is still all-gathered,
+        # then the frame is a static block gather out of it — the
+        # kernels' x operand shrinks to the frame; the interconnect win
+        # needs "alltoall"
+        gblock = (halo["halo_src_shard"].astype(jnp.int32) * n_cb_loc
+                  + halo["halo_src_block"].astype(jnp.int32))
+
+        def gather(x):
+            f = x.shape[-1]
+            x_full = jax.lax.all_gather(x, "data", axis=0, tiled=True)
+            return x_full.reshape(-1, CB, f)[gblock].reshape(-1, f)
+
+        return gather
+
+    # ragged exchange: each shard ships exactly the blocks its peers'
+    # frames reference — one uniform (D*B_pad, CB, f) all_to_all; the
+    # receive side drops into frame order via the packed recv slots
+    send_idx = halo["halo_send_block"].astype(jnp.int32).reshape(-1)
+    frame_src = halo["halo_frame_src"].astype(jnp.int32)
+
+    def gather(x):
+        f = x.shape[-1]
+        send = x.reshape(n_cb_loc, CB, f)[send_idx]
+        recv = jax.lax.all_to_all(send, "data", split_axis=0,
+                                  concat_axis=0, tiled=True)
+        return recv[frame_src].reshape(-1, f)
+
+    return gather
+
+
 def run_propagation(backend: PropagationBackend, nai, operands: dict,
                     x0, n_batch: int, *, interpret: bool = True,
-                    mesh=None):
+                    mesh=None, gather_mode: str = "dense",
+                    classify=None, cls_params=None):
     """Run the masked NAP loop for any registered backend.
 
     ``operands`` holds the backend's packed arrays (including the dense
     ``x_inf`` for backends with ``uses_dense_x_inf``). Returns
-    ``(exit_order (n_batch,), series (T_max+1, n_batch, f))``.
+    ``(exit_order (n_batch,), series (T_max+1, n_batch, f))`` — or
+    ``(exit_order, preds (n_batch,))`` when ``classify`` is given:
+    ``classify(cls_params, exit_order, series)`` runs right after the
+    loop, INSIDE shard_map when sharded, so each shard classifies its
+    own batch rows and only the argmax class ids are gathered (the
+    series never leaves the sharded region).
 
     With ``mesh=None`` (or a ``data`` axis of size 1) this is the
     single-device path. Otherwise the loop runs under `shard_map`:
     operands must come from ``pack_support(..., n_shards=D)`` (row
     partition in shard-major superblock order) and the returned
-    exit_order/series are in the PACKED (permuted) batch order — undo
-    with `repro.gnn.packing.shard_batch_perm`.
+    exit_order/series/preds are in the PACKED (permuted) batch order —
+    undo with `repro.gnn.packing.shard_batch_perm`. ``gather_mode``
+    picks the per-step frontier exchange (see the module docstring);
+    halo modes require the halo metadata emitted by
+    ``pack_support(halo=True)`` among the operands.
     """
+    if gather_mode not in GATHER_MODES:
+        raise ValueError(f"unknown gather_mode {gather_mode!r} "
+                         f"(one of {GATHER_MODES})")
     mesh = normalize_mesh(mesh)
+    has_halo = "halo_src_shard" in operands
     if mesh is None:
+        if has_halo:
+            raise ValueError("halo-packed operands (frame-local indices) "
+                             "cannot run single-device — pack with "
+                             "halo=False")
         backend.validate(operands, x0, n_batch)
-        return _masked_loop(
+        exit_order, series = _masked_loop(
             backend, nai, dict(operands), x0, n_batch, x0.shape[0],
             interpret, gather=lambda x: x,
             any_fn=lambda m: jnp.any(m).astype(jnp.int32))
+        if classify is None:
+            return exit_order, series
+        return exit_order, classify(cls_params, exit_order, series)
 
+    if (gather_mode != "dense") != has_halo:
+        raise ValueError(
+            f"gather_mode={gather_mode!r} and halo metadata disagree: "
+            f"halo/alltoall need pack_support(halo=True) operands "
+            f"(frame-local tile_col/src), dense needs global ones")
     D = int(mesh.shape["data"])
     S = x0.shape[0]
     if n_batch % (CB * D) or S % (CB * D):
@@ -323,28 +445,48 @@ def run_propagation(backend: PropagationBackend, nai, operands: dict,
             f"sharded operands must be packed with n_shards={D}: n_batch "
             f"{n_batch} and rows {S} must be multiples of CB*D = {CB * D}")
     nb_loc, rows_loc = n_batch // D, S // D
-    keys = tuple(backend.operand_logical)
+    logical = operand_logical(backend, gather_mode)
+    keys = tuple(logical)
     arrays = [operands[k] for k in keys]
-    in_specs = tuple(spec(*backend.operand_logical[k], mesh=mesh)
-                     for k in keys) + (spec("row_shard", None, mesh=mesh),)
+    in_specs = tuple(spec(*logical[k], mesh=mesh) for k in keys) \
+        + (spec("row_shard", None, mesh=mesh),)
     out_specs = (spec("row_shard", mesh=mesh),
-                 spec(None, "row_shard", None, mesh=mesh))
+                 spec("row_shard", mesh=mesh) if classify is not None
+                 else spec(None, "row_shard", None, mesh=mesh))
+    if classify is not None:
+        in_specs += (spec(mesh=mesh),)   # replicated classifier tree
 
     def local_fn(*args):
+        if classify is not None:
+            args, params = args[:-1], args[-1]
         ops = dict(zip(keys, args[:-1]))
+        x0_loc = args[-1]
+        if gather_mode == "dense":
+            def gather(x):
+                return jax.lax.all_gather(x, "data", axis=0, tiled=True)
+        else:
+            # (D, ...) shard-stacked halo metadata block-slices to its
+            # leading row — this shard's frame spec
+            gather = _halo_gather(
+                gather_mode, {k: ops.pop(k)[0] for k in HALO_LOGICAL},
+                rows_loc)
         if backend.uses_edges:
             # (D, e) shard-stacked edge arrays block-slice to (1, e)
             ops.update({k: ops[k][0] for k in ("src", "dst", "coef")})
-        backend.validate(ops, args[-1], nb_loc)
-        return _masked_loop(
-            backend, nai, ops, args[-1], nb_loc, rows_loc, interpret,
-            gather=lambda x: jax.lax.all_gather(x, "data", axis=0,
-                                                tiled=True),
+        backend.validate(ops, x0_loc, nb_loc)
+        exit_order, series = _masked_loop(
+            backend, nai, ops, x0_loc, nb_loc, rows_loc, interpret,
+            gather=gather,
             any_fn=lambda m: (jax.lax.psum(jnp.any(m).astype(jnp.int32),
                                            "data") > 0).astype(jnp.int32))
+        if classify is None:
+            return exit_order, series
+        return exit_order, classify(params, exit_order, series)
 
     # check_rep=False: the rep-tracker cannot see through the fori_loop
     # carry; correctness is covered by the bit-parity tests
     fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, check_rep=False)
+    if classify is not None:
+        return fn(*arrays, x0, cls_params)
     return fn(*arrays, x0)

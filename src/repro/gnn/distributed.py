@@ -51,12 +51,15 @@ def graph_as_support(g: Graph, r: float = 0.5) -> Support:
 
 def pack_graph(g: Graph, n_shards: int, r: float = 0.5,
                spmm_impl: str = "segment", *, nb_bucket=None,
-               s_bucket=None, tb_bucket=None):
+               s_bucket=None, tb_bucket=None, halo: bool = False):
     """(backend, PackedSupport) for full-graph propagation. Exits are
     disabled downstream (t_min > t_max), so the stationary operands are
     inert: zero rank-1 factors for the fused backend, an all-zero dense
     x_inf otherwise. Explicit buckets pin the padding geometry so runs
-    at different shard counts are bit-comparable."""
+    at different shard counts are bit-comparable. `halo=True` emits the
+    halo-frame metadata for the non-dense gather modes (full-graph
+    partitions of a well-mixed graph reference most blocks, so expect a
+    halo fraction near 1 — batch serving is where the halo pays)."""
     be = get_backend(spmm_impl)
     sup = graph_as_support(g, r)
     x0 = g.features.astype(np.float32)
@@ -69,20 +72,25 @@ def pack_graph(g: Graph, n_shards: int, r: float = 0.5,
                           s_bucket=s_bucket, tb_bucket=tb_bucket,
                           build_tiles=be.uses_tiles,
                           build_edges=be.uses_edges,
-                          x_inf_factors=factors, n_shards=n_shards)
+                          x_inf_factors=factors, n_shards=n_shards,
+                          halo=halo)
     return be, packed
 
 
 def distributed_series(mesh, g: Graph, k: int, r: float = 0.5,
                        spmm_impl: str = "segment", *,
                        interpret: bool = True, nb_bucket=None,
-                       s_bucket=None, tb_bucket=None):
+                       s_bucket=None, tb_bucket=None,
+                       gather_mode: str = "dense"):
     """[X^(0..k)] computed with the sharded backend step; host-verifiable
     against `repro.gnn.graph.propagated_series`. The mesh's ``data`` axis
-    size is the shard count (1 = single-device path)."""
+    size is the shard count (1 = single-device path). `gather_mode`
+    selects the per-step frontier exchange (`repro.gnn.backends`)."""
     D = int(mesh.shape["data"]) if "data" in mesh.axis_names else 1
+    halo = gather_mode != "dense" and D > 1
     be, packed = pack_graph(g, D, r, spmm_impl, nb_bucket=nb_bucket,
-                            s_bucket=s_bucket, tb_bucket=tb_bucket)
+                            s_bucket=s_bucket, tb_bucket=tb_bucket,
+                            halo=halo)
     # t_min > t_max: the threshold sentinel stays negative on every step,
     # so no node ever exits and the loop is pure propagation
     nai = NAIConfig(t_s=0.0, t_min=k + 1, t_max=k)
@@ -93,7 +101,9 @@ def distributed_series(mesh, g: Graph, k: int, r: float = 0.5,
         ops["x_inf"] = jnp.asarray(packed.x_inf)
     _, series = run_propagation(be, nai, ops, jnp.asarray(packed.x0),
                                 packed.n_batch, interpret=interpret,
-                                mesh=mesh if D > 1 else None)
+                                mesh=mesh if D > 1 else None,
+                                gather_mode=gather_mode if halo
+                                else "dense")
     if D > 1:
         series = series[:, shard_batch_perm(packed.n_batch, D), :]
     f = g.features.shape[1]

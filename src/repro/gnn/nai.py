@@ -209,7 +209,8 @@ def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
                        sup_src, sup_dst, sup_coef, x0, x_inf, n_batch: int,
                        *, spmm_impl: str = "segment", ell=None,
                        step_active=None, x_inf_factors=None,
-                       interpret: bool = True, mesh=None):
+                       interpret: bool = True, mesh=None,
+                       halo_operands=None, gather_mode: str = "dense"):
     """Compiled NAP: fori over orders with exit masks (static shapes).
 
     Returns (exit_order (nb,), stacked BATCH-ROW features
@@ -236,13 +237,17 @@ def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
     `mesh` (a mesh with a ``data`` axis, operands packed with
     ``pack_support(n_shards=D)``) runs the same loop under shard_map;
     results come back in the packed shard-major batch order (undo with
-    `repro.gnn.packing.shard_batch_perm`).
+    `repro.gnn.packing.shard_batch_perm`). `gather_mode` selects the
+    sharded per-step frontier exchange (``dense`` all_gather, or the
+    ``halo``/``alltoall`` frame exchange — those need `halo_operands`,
+    the ``halo_*`` metadata dict from a ``pack_support(halo=True)``
+    pack; see `repro.gnn.backends`).
 
     Per-order classification lives in `make_compiled_infer`, which wraps
     this core in one jitted function.
     """
     backend = get_backend(spmm_impl)
-    ops = {}
+    ops = dict(halo_operands or {})
     if backend.uses_tiles:
         if ell is None:
             raise ValueError(f"{spmm_impl} path needs ell="
@@ -260,14 +265,15 @@ def infer_batch_masked(cfg: GNNConfig, nai: NAIConfig, params,
     if backend.uses_dense_x_inf:
         ops["x_inf"] = x_inf
     return run_propagation(backend, nai, ops, x0, n_batch,
-                           interpret=interpret, mesh=mesh)
+                           interpret=interpret, mesh=mesh,
+                           gather_mode=gather_mode)
 
 
 def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
                         spmm_impl: str = "block_ell",
                         interpret: bool = True,
                         donate: Optional[bool] = None,
-                        mesh=None):
+                        mesh=None, gather_mode: str = "dense"):
     """One jitted function: masked NAP propagation + per-order
     classification (unrolled over orders, selected by exit mask).
 
@@ -275,20 +281,26 @@ def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
     `operands` is a dict — ``tiles/tile_col/valid/step_active`` for
     ``block_ell``, the same plus ``c_inf/s_inf`` (rank-1 stationary-state
     factors) for ``fused``, ``src/dst/coef`` for ``segment`` (see the
-    backend's ``operand_logical`` keys in `repro.gnn.backends`) — and
-    returns ``(predictions (nb,), exit_order (nb,))``. All shape
-    specialization happens through jax.jit's cache; callers bucket their
-    operand shapes (repro.gnn.packing) so repeat batches hit it. The
-    number of traced shapes is exposed via the jitted function's
-    ``_cache_size()``.
+    backend's ``operand_logical`` keys in `repro.gnn.backends`, plus the
+    ``halo_*`` metadata for halo gather modes) — and returns
+    ``(predictions (nb,), exit_order (nb,))``. All shape specialization
+    happens through jax.jit's cache; callers bucket their operand shapes
+    (repro.gnn.packing) so repeat batches hit it. The number of traced
+    shapes is exposed via the jitted function's ``_cache_size()``.
 
     `mesh` (any mesh with a ``data`` axis of size D > 1; operands must
     come from ``pack_support(..., n_shards=D)``) runs the propagation
     loop sharded under shard_map — each device owns its round-robin row
-    superblocks, the frontier is all-gathered per step — and un-permutes
-    exit orders and series back to the original batch order before
-    classification, so the returned predictions are positionally
-    identical to single-device serving.
+    superblocks, the per-step frontier exchange selected by
+    `gather_mode` (``dense`` all_gather / ``halo`` static frame gather /
+    ``alltoall`` ragged exchange; halo modes need a
+    ``pack_support(halo=True)`` pack). Per-order classification ALSO
+    runs inside the sharded region — each shard classifies its own batch
+    rows and only the (nb,) argmax class ids and exit orders are
+    gathered and un-permuted back to the original batch order, so the
+    (T_max+1, nb, f) series and the (nb, C) logits are never
+    replicated. Predictions are positionally identical to single-device
+    serving.
 
     `donate` hands the per-batch operands (``operands``, ``x0``,
     ``x_inf`` — NOT the classifier params, which persist across batches)
@@ -302,9 +314,24 @@ def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
     tmax = nai.t_max
     mesh = normalize_mesh(mesh)
     n_shards = int(mesh.shape["data"]) if mesh is not None else 1
+    if mesh is None:
+        gather_mode = "dense"
     if donate is None:
         donate = jax.default_backend() != "cpu"
     donate_argnums = (1, 2, 3) if donate else ()
+
+    def classify(cls_params, exit_order, series):
+        """Per-order classification selected by exit mask — row-wise, so
+        it runs unchanged on a shard's local batch rows or the full
+        batch."""
+        preds = jnp.zeros(exit_order.shape, jnp.int32)
+        for l in range(1, tmax + 1):
+            # series already carries batch rows only
+            feats = series[:l + 1, :, :cfg.feat_dim]
+            z = apply_classifier(cfg, cls_params[l], feats, l)
+            preds = jnp.where(exit_order == l,
+                              jnp.argmax(z, -1).astype(jnp.int32), preds)
+        return preds
 
     @functools.partial(jax.jit, donate_argnums=donate_argnums)
     def run(cls_params, operands, x0, x_inf):
@@ -312,21 +339,16 @@ def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
         ops = dict(operands)
         if backend.uses_dense_x_inf:
             ops["x_inf"] = x_inf
-        exit_order, series = run_propagation(
-            backend, nai, ops, x0, nb, interpret=interpret, mesh=mesh)
+        exit_order, preds = run_propagation(
+            backend, nai, ops, x0, nb, interpret=interpret, mesh=mesh,
+            gather_mode=gather_mode, classify=classify,
+            cls_params=cls_params)
         if n_shards > 1:
             # shard-major packed order -> original batch order (a static
             # gather; shard_batch_perm[r] is where batch row r landed)
             unperm = shard_batch_perm(nb, n_shards)
             exit_order = exit_order[unperm]
-            series = series[:, unperm, :]
-        preds = jnp.zeros((nb,), jnp.int32)
-        for l in range(1, tmax + 1):
-            # series already carries batch rows only (nb == series.shape[1])
-            feats = series[:l + 1, :, :cfg.feat_dim]
-            z = apply_classifier(cfg, cls_params[l], feats, l)
-            preds = jnp.where(exit_order == l,
-                              jnp.argmax(z, -1).astype(jnp.int32), preds)
+            preds = preds[unperm]
         return preds, exit_order
 
     run._donate_argnums = donate_argnums

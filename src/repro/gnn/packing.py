@@ -42,6 +42,37 @@ batch therefore has to amortize CB*D rows (the paper's batch 500 on 4
 shards pads to 512 — 2% — but tiny batches on many shards pay real
 padding). Batch rows land permuted too: `shard_batch_perm` maps original
 batch position -> packed position, and results gather back through it.
+
+Halo packing (``halo=True`` with ``n_shards > 1``): each shard's tiles
+only ever read the CB column blocks named in its `tile_col`, so the
+dense per-step frontier all_gather moves mostly rows nobody reads. The
+packer therefore also computes, per shard, the sorted union of global
+CB blocks its rows reference — own blocks plus the remote *halo* — and
+rewrites `tile_col` (and the segment path's `src`) into indices of that
+local **halo frame** instead of global packed coordinates. The frame
+layout is the sorted global block order, which groups entries by source
+shard; the emitted metadata drives both compiled exchange strategies in
+`repro.gnn.backends.run_propagation`:
+
+* ``halo_src_shard`` / ``halo_src_block`` (D, H_pad) — where each frame
+  block lives (owner shard, owner-local block); a static gather out of
+  the all-gathered frontier (``gather_mode="halo"``).
+* ``halo_send_block`` (D, D, B_pad) / ``halo_frame_src`` (D, H_pad) —
+  the per-pair send lists and the frame positions of the received
+  blocks for the `jax.lax.all_to_all` ragged exchange
+  (``gather_mode="alltoall"``), which moves only halo bytes on a real
+  interconnect.
+* ``halo_count`` (D,) — real frame entries per shard (the rest is
+  padding; padded entries point at block 0, which no valid tile or
+  real edge ever references).
+
+H_pad and B_pad are bucket-padded to the same {1,2,3}·2^k series as
+every other operand (capped at the block counts they index), carried in
+`shape_key`, and pooled by the buffer-reuse path, so steady-state
+serving stays zero-compile and zero-alloc with halo on. Frame contents
+are bit-identical to the corresponding rows of the dense frontier and
+tile slot order never moves, so halo-gather propagation preserves the
+sharded == single-device bit-identity guarantee.
 """
 from __future__ import annotations
 
@@ -141,6 +172,14 @@ class PackedSupport:
     # row partition over the serving mesh's data axis (1 = unsharded);
     # sharded operands are in shard-major superblock-permuted row order
     n_shards: int = 1
+    # halo-frame metadata (halo=True packs only; see module docstring):
+    # per shard, the sorted union of global CB blocks its rows reference,
+    # bucket-padded to H_pad entries, plus the all_to_all exchange plan
+    halo_src_shard: Optional[np.ndarray] = None   # (D, H_pad) int32
+    halo_src_block: Optional[np.ndarray] = None   # (D, H_pad) int32
+    halo_count: Optional[np.ndarray] = None       # (D,) int32 real entries
+    halo_send_block: Optional[np.ndarray] = None  # (D, D, B_pad) int32
+    halo_frame_src: Optional[np.ndarray] = None   # (D, H_pad) int32
 
     @property
     def n_rb(self) -> int:
@@ -149,6 +188,33 @@ class PackedSupport:
     @property
     def density(self) -> float:
         return float(self.valid.mean()) if self.valid.size else 0.0
+
+    @property
+    def n_halo_pad(self) -> int:
+        """Bucket-padded halo-frame blocks per shard (0 = dense pack)."""
+        return (0 if self.halo_src_shard is None
+                else self.halo_src_shard.shape[1])
+
+    @property
+    def halo_send_pad(self) -> int:
+        """Bucket-padded all_to_all send-list blocks per shard pair."""
+        return (0 if self.halo_send_block is None
+                else self.halo_send_block.shape[2])
+
+    @property
+    def halo_rows(self) -> int:
+        """True halo-frame rows of the widest shard (the boundary the
+        exchange actually has to move; n_halo_pad * CB is what the
+        padded gather materializes)."""
+        return (0 if self.halo_count is None
+                else int(self.halo_count.max()) * CB)
+
+    @property
+    def halo_frac(self) -> float:
+        """halo_rows / n_pad — 1.0 means the halo set degenerated to the
+        full frontier (no communication saving over the dense gather)."""
+        return self.halo_rows / self.n_pad if self.halo_count is not None \
+            else 1.0
 
     def shape_key(self, spmm_impl: str = "block_ell") -> tuple:
         """The jit-cache key: exactly the static shapes the compiled
@@ -160,12 +226,17 @@ class PackedSupport:
         shape) — but they compile different programs, so the impl name
         stays in the key. `n_shards` is in the key because the sharded
         runner compiles a different (shard_map) program even at equal
-        operand shapes."""
+        operand shapes; halo packs append their frame/send pads, which
+        size the per-step gather (and distinguish halo from dense)."""
         if spmm_impl in ("block_ell", "fused"):
-            return (spmm_impl, self.n_shards, self.n_batch, self.n_pad,
-                    self.tiles.shape[1], self.x0.shape[1])
-        return ("segment", self.n_shards, self.n_batch, self.n_pad,
-                self.x0.shape[1], self.src.shape[-1])
+            key = (spmm_impl, self.n_shards, self.n_batch, self.n_pad,
+                   self.tiles.shape[1], self.x0.shape[1])
+        else:
+            key = ("segment", self.n_shards, self.n_batch, self.n_pad,
+                   self.x0.shape[1], self.src.shape[-1])
+        if self.halo_src_shard is not None:
+            key += ("halo", self.n_halo_pad, self.halo_send_pad)
+        return key
 
 
 def _remap_rows(sup: Support, nb_bucket: int) -> np.ndarray:
@@ -185,7 +256,10 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
                  build_edges: bool = True,
                  x_inf_factors=None,
                  out: Optional[PackedSupport] = None,
-                 n_shards: int = 1) -> PackedSupport:
+                 n_shards: int = 1,
+                 halo: bool = False,
+                 h_bucket: Optional[int] = None,
+                 hb_bucket: Optional[int] = None) -> PackedSupport:
     """Pack a sampled `Support` (+ its features and per-batch-node
     stationary state) into bucket-padded block-ELL operands.
 
@@ -224,7 +298,15 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
     static shapes per shard, tiles bit-identical to a single-device pack
     of the same geometry, edge arrays stacked (D, e_pad) with local dst
     ids. Explicit buckets must respect the sharded alignment (batch and
-    rows multiples of CB*D)."""
+    rows multiples of CB*D).
+
+    `halo=True` (sharded packs only) additionally computes each shard's
+    halo frame — the sorted union of global CB blocks its rows reference
+    — emits the `halo_*` metadata, and rewrites `tile_col` / the segment
+    `src` ids into FRAME-local coordinates, so the propagation loop can
+    gather H_pad·CB frame rows per step instead of the full S_pad
+    frontier. `h_bucket` / `hb_bucket` are hwm floors for the frame and
+    send-list pads, same contract as the other buckets."""
     row_align = CB * n_shards
     batch_align = RB if n_shards == 1 else CB * n_shards
     if s_bucket and s_bucket % row_align:
@@ -260,6 +342,29 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
         rows_loc = n_pad // n_shards
     else:
         row_dest = row_of
+    halo_on = bool(halo) and n_shards > 1
+    if n_shards > 1 and (halo_on or build_edges):
+        src_p = row_perm[src]
+        dst_p = row_perm[dst]
+        e_shard = dst_p // rows_loc
+
+    # --- halo frame geometry (sorted union of global CB blocks each
+    # shard's rows reference, grouped by source shard because global
+    # block ids are shard-major) — needed before the reuse decision
+    if halo_on:
+        n_cb_loc = n_cb // n_shards
+        key_h = e_shard * n_cb + src_p // CB
+        uniq_h = np.unique(key_h)
+        h_shard = uniq_h // n_cb           # frame OWNER (destination) shard
+        h_block = uniq_h % n_cb            # global packed block id
+        h_counts = np.bincount(h_shard, minlength=n_shards)
+        h_needed = max(int(h_counts.max()) if len(uniq_h) else 1, 1)
+        h_pad = min(max(next_bucket(h_needed), h_bucket or 0), n_cb)
+        # all_to_all plan: (source shard, destination shard) send lists
+        skey = (h_block // n_cb_loc) * n_shards + h_shard
+        s_counts = np.bincount(skey, minlength=n_shards * n_shards)
+        s_needed = max(int(s_counts.max()), 1)
+        hb_pad = min(max(next_bucket(s_needed), hb_bucket or 0), n_cb_loc)
     if build_tiles:
         rb = dst // RB
         cb = src // CB
@@ -276,7 +381,6 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
     xi_cols = f_pad if x_inf.shape[1] else 0
     if build_edges:
         if n_shards > 1:
-            e_shard = row_perm[dst] // rows_loc
             e_counts = np.bincount(e_shard, minlength=n_shards)
             e_pad = max(next_bucket(max(int(e_counts.max()), 1), 1),
                         e_bucket or 0)
@@ -293,7 +397,12 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
              and out.x0.shape == (n_pad, f_pad)
              and out.x_inf.shape == (nb_bucket, xi_cols)
              and out.src.shape == e_shape
-             and (out.c_inf is not None) == (x_inf_factors is not None))
+             and (out.c_inf is not None) == (x_inf_factors is not None)
+             and (out.halo_src_shard is not None) == halo_on
+             and (not halo_on
+                  or (out.halo_src_shard.shape == (n_shards, h_pad)
+                      and out.halo_send_block.shape
+                      == (n_shards, n_shards, hb_pad))))
     if reuse:
         p = out
         p.tiles.fill(0.0)
@@ -317,10 +426,53 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
                    if x_inf_factors is not None else None),
             s_inf=(np.zeros(f_pad, np.float32)
                    if x_inf_factors is not None else None),
-            n_shards=n_shards)
+            n_shards=n_shards,
+            halo_src_shard=(np.zeros((n_shards, h_pad), np.int32)
+                            if halo_on else None),
+            halo_src_block=(np.zeros((n_shards, h_pad), np.int32)
+                            if halo_on else None),
+            halo_count=(np.zeros(n_shards, np.int32) if halo_on else None),
+            halo_send_block=(np.zeros((n_shards, n_shards, hb_pad),
+                                      np.int32) if halo_on else None),
+            halo_frame_src=(np.zeros((n_shards, h_pad), np.int32)
+                            if halo_on else None))
     p.n_batch, p.nb_real, p.n_pad, p.s_real = nb_bucket, nb, n_pad, S
     p.n_shards = n_shards
     p.reused = reuse
+
+    # --- halo metadata + the global-block -> frame-position lookup used
+    # to rewrite tile_col/src below. uniq_h is sorted by (owner shard,
+    # global block), so each shard's frame entries are contiguous,
+    # ascending, and grouped by source shard — the layout both exchange
+    # strategies rely on.
+    if halo_on:
+        for arr in (p.halo_src_shard, p.halo_src_block, p.halo_count,
+                    p.halo_send_block, p.halo_frame_src):
+            arr.fill(0)
+        first_h = np.concatenate([[0], np.cumsum(h_counts)[:-1]])
+        h_slot = np.arange(len(uniq_h), dtype=np.int64) - first_h[h_shard]
+        h_src = h_block // n_cb_loc        # source shard of each entry
+        p.halo_src_shard[h_shard, h_slot] = h_src.astype(np.int32)
+        p.halo_src_block[h_shard, h_slot] = \
+            (h_block % n_cb_loc).astype(np.int32)
+        p.halo_count[:] = h_counts.astype(np.int32)
+        # receive slot: rank within the (owner, source) group — entries
+        # of one source are contiguous within a frame, ascending block
+        g_key = h_shard * n_shards + h_src
+        g_first = np.searchsorted(g_key, np.arange(n_shards * n_shards))
+        r_slot = np.arange(len(uniq_h), dtype=np.int64) - g_first[g_key]
+        p.halo_frame_src[h_shard, h_slot] = \
+            (h_src * hb_pad + r_slot).astype(np.int32)
+        # send lists, ascending source-local block per (source, dest)
+        # pair — exactly the receive order r_slot encodes
+        s_sort = np.argsort(skey, kind="stable")
+        sk = skey[s_sort]
+        s_first = np.searchsorted(sk, np.arange(n_shards * n_shards))
+        s_slot = np.arange(len(uniq_h), dtype=np.int64) - s_first[sk]
+        p.halo_send_block[sk // n_shards, sk % n_shards, s_slot] = \
+            (h_block % n_cb_loc)[s_sort].astype(np.int32)
+        pos_lut = np.zeros((n_shards, n_cb), np.int64)
+        pos_lut[h_shard, h_block] = h_slot
 
     # --- vectorized block-ELL build (cf. repro.kernels.spmm.ops, which
     # loops per tile; this path is a handful of numpy passes)
@@ -332,8 +484,17 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
         if n_shards > 1:
             # same tiles, same slots — only the row-block axis moves to
             # its shard position and column ids map to packed superblocks
-            p.tile_col[rb_perm[tile_rb], slot] = \
-                sb_perm[tile_cb].astype(np.int32)
+            # (or, halo, to the owning shard's frame position: every tile
+            # exists because of >= 1 edge, so its (shard, block) pair is
+            # always in the frame lookup)
+            packed_cb = sb_perm[tile_cb]
+            if halo_on:
+                t_shard = rb_perm[tile_rb] * RB // rows_loc
+                p.tile_col[rb_perm[tile_rb], slot] = \
+                    pos_lut[t_shard, packed_cb].astype(np.int32)
+            else:
+                p.tile_col[rb_perm[tile_rb], slot] = \
+                    packed_cb.astype(np.int32)
             p.valid[rb_perm[tile_rb], slot] = 1
             np.add.at(p.tiles, (rb_perm[rb], slot[inverse], dst % RB,
                                 src % CB), sup.coef)
@@ -372,9 +533,16 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
     # self-edges on the last (always padding or hop-max) row
     if build_edges:
         if n_shards > 1:
-            src_p = row_perm[src]
-            dst_p = row_perm[dst]
-            p.src.fill(n_pad - 1)
+            # halo: src addresses the shard's frame rows, not the global
+            # frontier; padding edges point at the frame's last (padding)
+            # row with coef 0
+            if halo_on:
+                src_x = pos_lut[e_shard, src_p // CB] * CB + src_p % CB
+                src_fill = h_pad * CB - 1
+            else:
+                src_x = src_p
+                src_fill = n_pad - 1
+            p.src.fill(src_fill)
             p.dst.fill(rows_loc - 1)
             p.coef.fill(0.0)
             # per-shard slices keep the ORIGINAL edge order (all of one
@@ -383,7 +551,7 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
             for sh in range(n_shards):
                 m = e_shard == sh
                 k = int(e_counts[sh])
-                p.src[sh, :k] = src_p[m].astype(np.int32)
+                p.src[sh, :k] = src_x[m].astype(np.int32)
                 p.dst[sh, :k] = (dst_p[m] - sh * rows_loc).astype(np.int32)
                 p.coef[sh, :k] = sup.coef[m]
         else:

@@ -6,6 +6,7 @@ devices via XLA_FLAGS before any jax initialization."""
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,21 +20,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_devices: int = 1):
     """Tiny mesh over whatever devices exist (tests)."""
     dev = jax.devices()[:n_devices]
-    return jax.sharding.Mesh(
-        __import__("numpy").array(dev).reshape(1, len(dev)),
-        ("data", "model"))
+    return jax.sharding.Mesh(np.array(dev).reshape(1, len(dev)),
+                             ("data", "model"))
 
 
 def make_serving_mesh(n_data: int = 0):
     """1-D ``('data',)`` mesh over the first `n_data` devices (all
     devices when 0) — the GNN serving engine's row-sharding mesh: packed
     support rows partition over ``data`` (repro.gnn.backends), features
-    stay unsharded. Raises when fewer than `n_data` devices exist —
-    silently serving fewer shards than asked for would defeat the
-    memory-capacity reason to shard."""
+    stay unsharded. Device position along ``data`` IS the shard id the
+    packer's halo metadata names (``halo_src_shard`` / the `all_to_all`
+    send lists address peers by data-axis index), so the mesh must not
+    reorder devices between packing and dispatch — one more reason this
+    is a constructor, not an ambient global. Raises when fewer than
+    `n_data` devices exist — silently serving fewer shards than asked
+    for would defeat the memory-capacity reason to shard."""
     avail = jax.devices()
     if n_data > len(avail):
         raise ValueError(f"make_serving_mesh({n_data}): only "
                          f"{len(avail)} devices available")
     dev = avail[:n_data] if n_data else avail
-    return jax.sharding.Mesh(__import__("numpy").array(dev), ("data",))
+    return jax.sharding.Mesh(np.array(dev), ("data",))

@@ -59,13 +59,24 @@ host stage packs row-partitioned shards (`pack_support(n_shards=D)` —
 same static shapes per shard, shard-major superblock round-robin), the
 device stage places each operand with its backend-declared
 NamedSharding, and the jitted runner executes the NAP loop under
-shard_map (frontier all-gathered over ``data`` per step, live flag
-psum-reduced) before un-permuting results to the original batch order.
-Supports larger than one device's memory split their packed tiles and
-rows across the mesh; predictions and exit orders are bit-identical to
-single-device serving, and the pipeline/pool/bucketing machinery is
-unchanged (zero steady-state compiles and pack allocations still hold
-per shard count).
+shard_map (live flag psum-reduced) before un-permuting results to the
+original batch order. Supports larger than one device's memory split
+their packed tiles and rows across the mesh; predictions and exit
+orders are bit-identical to single-device serving, and the
+pipeline/pool/bucketing machinery is unchanged (zero steady-state
+compiles and pack allocations still hold per shard count).
+
+``gather_mode=`` picks the sharded per-step frontier exchange (see
+`repro.gnn.backends`): ``"halo"`` (default) packs per-shard halo frames
+— each shard's tiles read a (H_pad·CB, f) frame holding exactly the
+column blocks they reference, assembled by a static gather — with
+``"alltoall"`` the `jax.lax.all_to_all` ragged-exchange variant for
+real meshes, and ``"dense"`` the PR-4 full-frontier all_gather
+reference. All three are bit-identical; `halo_stats` records the
+per-step gathered rows and the halo fraction (halo rows / S_pad) the
+benchmark's structural columns are accountable for. Per-order
+classification stays row-sharded too: only argmax class ids and exit
+orders are gathered off the mesh.
 """
 from __future__ import annotations
 
@@ -80,13 +91,14 @@ import numpy as np
 
 from jax.sharding import NamedSharding
 
-from repro.gnn.backends import get_backend, normalize_mesh, pack_operands
+from repro.gnn.backends import (GATHER_MODES, get_backend, normalize_mesh,
+                                operand_logical, pack_operands)
 from repro.gnn.graph import Graph
 from repro.gnn.models import GNNConfig
 from repro.gnn.nai import (NAIConfig, infer_batch_host, make_compiled_infer,
                            support_stationary_factors)
-from repro.gnn.packing import (PackedSupport, batch_bucket, pack_support,
-                               step_active_blocks)
+from repro.gnn.packing import (CB, PackedSupport, batch_bucket,
+                               pack_support, step_active_blocks)
 from repro.gnn.sampler import sample_support
 from repro.sharding.logical import spec
 
@@ -175,9 +187,13 @@ class NAIServingEngine:
                  *, max_wait_s: float = 0.01, mode: str = "host",
                  spmm_impl: str = "block_ell", interpret: bool = True,
                  pipeline_depth: int = 1, donate: Optional[bool] = None,
-                 latency_window: int = 4096, mesh=None):
+                 latency_window: int = 4096, mesh=None,
+                 gather_mode: str = "halo"):
         if mode not in ("host", "compiled"):
             raise ValueError(f"unknown mode {mode!r}")
+        if gather_mode not in GATHER_MODES:
+            raise ValueError(f"unknown gather_mode {gather_mode!r} "
+                             f"(one of {GATHER_MODES})")
         if pipeline_depth < 1:
             raise ValueError(f"pipeline_depth must be >= 1, got "
                              f"{pipeline_depth}")
@@ -198,17 +214,26 @@ class NAIServingEngine:
         self.spmm_impl = spmm_impl
         self.mesh = mesh
         self.n_shards = int(mesh.shape["data"]) if mesh is not None else 1
+        # the frontier exchange only exists across shards — a degenerate
+        # mesh serves the plain single-device path
+        self.gather_mode = gather_mode if self.n_shards > 1 else "dense"
+        # per-step exchange footprint of the worst batch seen (sharded
+        # engines only; serving_bench's structural halo columns)
+        self.halo_stats: Dict[str, float] = {
+            "gather_rows_per_step": 0, "halo_rows": 0, "s_pad": 0,
+            "halo_frac": 0.0}
         self.pipeline_depth = pipeline_depth
         self.queue: Deque[Request] = deque()
         self.stats = EngineStats(latencies=LatencyRing(latency_window))
         # compiled-path state: jitted runner + bucket high-water marks
-        # keyed by padded batch size -> (s_bucket, tb_bucket, e_bucket)
+        # keyed by padded batch size
+        # -> (s_bucket, tb_bucket, e_bucket, h_bucket, hb_bucket)
         self.jit_stats: Dict[str, int] = {"compiles": 0, "hits": 0}
         self.pack_stats: Dict[str, int] = {"allocs": 0, "reuses": 0}
         # per-batch stage breakdown (host/dispatch/sync seconds), bounded
         self.batch_timings: Deque[Dict[str, float]] = deque(maxlen=1024)
         self._runner = None
-        self._bucket_hwm: Dict[int, Tuple[int, int, int]] = {}
+        self._bucket_hwm: Dict[int, Tuple[int, int, int, int, int]] = {}
         self._seen_keys: set = set()
         self._inflight: Deque[_Inflight] = deque()
         # rotating pack-buffer pool: bucket -> pipeline_depth + 1 slots
@@ -219,10 +244,11 @@ class NAIServingEngine:
         if mode == "compiled":
             self._backend = get_backend(spmm_impl)
             if self.mesh is not None:
-                # backend, mesh, and operand keys are fixed for the
-                # engine's lifetime — build the per-operand NamedShardings
-                # once, off the per-batch dispatch path
-                logical = dict(self._backend.operand_logical,
+                # backend, mesh, gather mode, and operand keys are fixed
+                # for the engine's lifetime — build the per-operand
+                # NamedShardings once, off the per-batch dispatch path
+                logical = dict(operand_logical(self._backend,
+                                               self.gather_mode),
                                x0=("row_shard", None),
                                x_inf=("row_shard", None))
                 self._shardings = {
@@ -231,7 +257,8 @@ class NAIServingEngine:
                     for name, dims in logical.items()}
             self._runner = make_compiled_infer(
                 cfg, nai, spmm_impl=spmm_impl, interpret=interpret,
-                donate=donate, mesh=self.mesh)
+                donate=donate, mesh=self.mesh,
+                gather_mode=self.gather_mode)
             self._cls_params = {
                 l: {k: jnp.asarray(v) for k, v in p.items()}
                 for l, p in params["cls"].items()}
@@ -273,7 +300,7 @@ class NAIServingEngine:
             x_inf = np.zeros((nb, 0), np.float32)
 
         nb_bucket = batch_bucket(nb, self.n_shards)
-        hwm = self._bucket_hwm.get(nb_bucket, (0, 0, 0))
+        hwm = self._bucket_hwm.get(nb_bucket, (0, 0, 0, 0, 0))
         slots = self._pack_pool.setdefault(
             nb_bucket, [None] * (self.pipeline_depth + 1))
         idx = self._pool_idx.get(nb_bucket, 0)
@@ -284,13 +311,29 @@ class NAIServingEngine:
                               build_edges=be.uses_edges,
                               x_inf_factors=(c_inf, s_inf)
                               if be.uses_factors else None,
-                              out=slots[idx], n_shards=self.n_shards)
+                              out=slots[idx], n_shards=self.n_shards,
+                              halo=self.gather_mode != "dense",
+                              h_bucket=hwm[3], hb_bucket=hwm[4])
         slots[idx] = packed
         self._pool_idx[nb_bucket] = (idx + 1) % len(slots)
         self.pack_stats["reuses" if packed.reused else "allocs"] += 1
         self._bucket_hwm[nb_bucket] = (
             max(hwm[0], packed.n_pad), max(hwm[1], packed.tiles.shape[1]),
-            max(hwm[2], packed.src.shape[-1]))
+            max(hwm[2], packed.src.shape[-1]),
+            max(hwm[3], packed.n_halo_pad), max(hwm[4], packed.halo_send_pad))
+        if self.mesh is not None:
+            # per-step exchange footprint (structural: what the compiled
+            # gather materializes vs the true boundary vs dense S_pad)
+            halo_on = packed.halo_src_shard is not None
+            grows = (packed.n_halo_pad * CB if halo_on else packed.n_pad)
+            hrows = packed.halo_rows if halo_on else packed.n_pad
+            hs = self.halo_stats
+            hs["gather_rows_per_step"] = max(hs["gather_rows_per_step"],
+                                             grows)
+            hs["halo_rows"] = max(hs["halo_rows"], hrows)
+            hs["s_pad"] = max(hs["s_pad"], packed.n_pad)
+            hs["halo_frac"] = max(hs["halo_frac"],
+                                  packed.halo_frac if halo_on else 1.0)
 
         key = packed.shape_key(self.spmm_impl)
         if key in self._seen_keys:

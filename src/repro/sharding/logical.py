@@ -48,6 +48,10 @@ DEFAULT_RULES: dict[str, Tuple[str, ...]] = {
     # packed serving operands: support/batch rows partitioned by CB
     # superblock over the data axis (repro.gnn.backends / repro.gnn.packing)
     "row_shard": ("data",),
+    # halo-exchange metadata (pack_support(halo=True)): leading axis is
+    # the OWNING shard — same data-axis slice as row_shard, named apart
+    # because the payload is per-shard frame/send plans, not rows
+    "halo_shard": ("data",),
 }
 
 

@@ -161,6 +161,116 @@ def test_sharded_spmm_reassembles_bit_equal(graph):
         np.testing.assert_array_equal(out_sh[rowp], out_base)
 
 
+def _halo_packs(g, batch_size, seed, n_shards, **kw):
+    """(dense-sharded, halo-sharded) pack pair with identical geometry
+    (the halo pack pins the dense pack's buckets, so tiles/valid/rows are
+    byte-identical and only the coordinate systems differ)."""
+    rng = np.random.default_rng(seed)
+    batch = rng.choice(g.test_idx, size=batch_size, replace=False)
+    sup = sample_support(g, batch, 2, 0.5)
+    x0 = g.features[sup.nodes][:, :64].astype(np.float32)
+    x_inf = np.zeros((sup.n_batch, 64), np.float32)
+    dense = pack_support(sup, x0, x_inf, n_shards=n_shards, **kw)
+    halo = pack_support(sup, x0, x_inf, n_shards=n_shards, halo=True,
+                        nb_bucket=dense.n_batch, s_bucket=dense.n_pad,
+                        tb_bucket=dense.tiles.shape[1],
+                        e_bucket=dense.src.shape[-1], **kw)
+    assert (halo.n_pad, halo.n_batch) == (dense.n_pad, dense.n_batch)
+    return dense, halo
+
+
+def _check_halo_cover(dense, halo):
+    """Every shard's halo frame is EXACTLY the sorted union of the global
+    CB blocks its tiles/edges reference: no missing block (coverage), no
+    dead entry (minimality); frame-local coordinates round-trip to the
+    dense pack's global ones; the all_to_all send/recv plan reassembles
+    each frame."""
+    D = halo.n_shards
+    n_cb = halo.n_pad // CB
+    n_cb_loc = n_cb // D
+    bpad = halo.halo_send_pad
+    has_tiles = dense.tiles.shape[1] > 0
+    has_edges = dense.src.shape[-1] > 0 and dense.coef.size
+    if has_tiles:
+        np.testing.assert_array_equal(halo.tiles, dense.tiles)
+        np.testing.assert_array_equal(halo.valid, dense.valid)
+    n_rb_loc = halo.n_rb // D
+    rows_loc = halo.n_pad // D
+    for s in range(D):
+        c = int(halo.halo_count[s])
+        full_frame = (halo.halo_src_shard[s].astype(np.int64) * n_cb_loc
+                      + halo.halo_src_block[s])
+        frame = full_frame[:c]
+        # frames are strictly sorted global block ids (grouped by owner)
+        assert (np.diff(frame) > 0).all(), s
+        assert c <= n_cb and halo.n_halo_pad >= c
+        referenced = []
+        if has_tiles:
+            sl = slice(s * n_rb_loc, (s + 1) * n_rb_loc)
+            v = dense.valid[sl] == 1
+            referenced.append(dense.tile_col[sl][v])
+            # frame-local tile_col maps back to the dense global blocks
+            np.testing.assert_array_equal(
+                full_frame[halo.tile_col[sl][v]], dense.tile_col[sl][v])
+        if has_edges:
+            real = dense.coef[s] != 0.0
+            referenced.append(dense.src[s][real] // CB)
+            src_h = halo.src[s][real].astype(np.int64)
+            np.testing.assert_array_equal(
+                full_frame[src_h // CB] * CB + src_h % CB,
+                dense.src[s][real])
+            # padding edges stay inside the frame
+            assert halo.src[s].max() < halo.n_halo_pad * CB
+        want = np.unique(np.concatenate(referenced))
+        # coverage AND minimality in one shot
+        np.testing.assert_array_equal(frame, want)
+        # the exchange plan reassembles the frame: sender t's list to s
+        # holds exactly s's frame entries owned by t, in frame order
+        recv = (np.arange(D, dtype=np.int64)[:, None] * n_cb_loc
+                + halo.halo_send_block[:, s, :])        # (D, B_pad) global
+        np.testing.assert_array_equal(
+            recv.reshape(-1)[halo.halo_frame_src[s, :c]], frame)
+        assert bpad == halo.halo_send_block.shape[2]
+    # every send-list slot is a legal local block id
+    assert halo.halo_send_block.min() >= 0
+    assert halo.halo_send_block.max() < max(n_cb_loc, 1)
+    assert rows_loc % CB == 0
+
+
+def test_halo_frame_covers_tile_cols(graph):
+    for D, bs, seed in ((2, 37, 0), (4, 24, 1), (8, 16, 2), (3, 40, 3)):
+        dense, halo = _halo_packs(graph, bs, seed, D)
+        _check_halo_cover(dense, halo)
+    # segment-path (edges-only) packs get the same guarantee
+    for D in (2, 4):
+        dense, halo = _halo_packs(graph, 30, 5, D, build_tiles=False)
+        _check_halo_cover(dense, halo)
+
+
+def test_halo_frame_hypothesis(graph):
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(bs=st.integers(4, 48), seed=st.integers(0, 31),
+           D=st.sampled_from([2, 4]))
+    def prop(bs, seed, D):
+        dense, halo = _halo_packs(graph, bs, seed, D)
+        _check_halo_cover(dense, halo)
+
+    prop()
+
+
+def test_halo_shrinks_frame_on_padded_batches(graph):
+    """The batch region pads to CB*D, so pure-padding superblocks exist
+    and are never referenced — the halo frame must be strictly smaller
+    than the dense frontier here (the --check guarantee)."""
+    for D in (2, 4):
+        _, halo = _halo_packs(graph, 24, 9, D)
+        assert halo.halo_frac < 1.0, (D, halo.halo_frac)
+        assert halo.halo_rows <= halo.n_halo_pad * CB <= halo.n_pad
+
+
 def test_batch_bucket_alignment():
     assert batch_bucket(32) == 32            # RB-aligned single-device
     assert batch_bucket(32, 2) == CB * 2     # CB*D-aligned sharded

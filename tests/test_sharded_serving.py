@@ -1,8 +1,10 @@
 """Sharded serving acceptance: pipelined × sharded must equal serial ×
 single-device — identical completion order, predictions, and exit orders
-for every registered backend at multiple shard counts — with zero
-steady-state jit compiles and zero steady-state pack allocations. Runs
-in a subprocess that forces 8 host devices (keep it isolated)."""
+for every registered backend at multiple shard counts AND for every
+frontier exchange (dense all_gather, static halo-frame gather, all_to_all
+ragged exchange) — with zero steady-state jit compiles and zero
+steady-state pack allocations on the default halo path. Runs in a
+subprocess that forces 8 host devices (keep it isolated)."""
 import os
 import subprocess
 import sys
@@ -45,21 +47,42 @@ for impl in sorted(BACKENDS):
                             mode="compiled", spmm_impl=impl)
     bn, bp, bo = serve(base)
     for D in (2, 4):
-        eng = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
-                               mode="compiled", spmm_impl=impl,
-                               pipeline_depth=2, mesh=make_serving_mesh(D))
-        assert eng.n_shards == D
-        sn, sp, so = serve(eng)
-        assert np.array_equal(sn, bn), (impl, D)       # FIFO completion
-        assert np.array_equal(sp, bp), (impl, D)       # predictions
-        assert np.array_equal(so, bo), (impl, D)       # exit orders
-        assert not eng._inflight
-        serve(eng)                                     # pool converges
-        c0, a0 = eng.jit_stats["compiles"], eng.pack_stats["allocs"]
-        serve(eng)                                     # steady state
-        assert eng.jit_stats["compiles"] == c0, (impl, D, eng.jit_stats)
-        assert eng.pack_stats["allocs"] == a0, (impl, D, eng.pack_stats)
-        assert eng.jit_cache_size() == c0, (impl, D)
+        # gather-mode bit-parity: the default halo frame gather, the
+        # dense all_gather reference, and (at D=2, bounding runtime) the
+        # all_to_all ragged exchange must ALL reproduce single-device
+        # predictions and exit orders exactly
+        modes = ("halo", "dense") + (("alltoall",) if D == 2 else ())
+        for gm in modes:
+            eng = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
+                                   mode="compiled", spmm_impl=impl,
+                                   pipeline_depth=2,
+                                   mesh=make_serving_mesh(D),
+                                   gather_mode=gm)
+            assert eng.n_shards == D and eng.gather_mode == gm
+            sn, sp, so = serve(eng)
+            assert np.array_equal(sn, bn), (impl, D, gm)  # FIFO completion
+            assert np.array_equal(sp, bp), (impl, D, gm)  # predictions
+            assert np.array_equal(so, bo), (impl, D, gm)  # exit orders
+            assert not eng._inflight
+            if gm != "dense":
+                # the halo frame must actually shrink the exchange and
+                # stay bounded by its own metadata
+                assert eng.halo_stats["halo_frac"] < 1.0, (impl, D, gm)
+                assert (eng.halo_stats["halo_rows"]
+                        <= eng.halo_stats["gather_rows_per_step"]
+                        <= eng.halo_stats["s_pad"]), \
+                    (impl, D, gm, eng.halo_stats)
+            # EVERY gather mode holds the zero-steady-state invariants
+            # (halo pads folded into bucket hwm/pool; dense = the PR-4
+            # guarantee, must not regress)
+            serve(eng)                                 # pool converges
+            c0, a0 = eng.jit_stats["compiles"], eng.pack_stats["allocs"]
+            serve(eng)                                 # steady state
+            assert eng.jit_stats["compiles"] == c0, \
+                (impl, D, gm, eng.jit_stats)
+            assert eng.pack_stats["allocs"] == a0, \
+                (impl, D, gm, eng.pack_stats)
+            assert eng.jit_cache_size() == c0, (impl, D, gm)
 
 # a degenerate 1-device mesh falls back to the plain single-device path
 eng1 = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
@@ -68,7 +91,9 @@ eng1 = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
 assert eng1.mesh is None and eng1.n_shards == 1
 n1, p1, o1 = serve(eng1)
 
-# mesh validation: host mode and data-axis-free meshes are rejected
+# mesh validation: host mode, data-axis-free meshes, and unknown gather
+# modes are rejected; halo-packed operands can't run dense (and vice
+# versa) through run_propagation
 import numpy as _np
 from jax.sharding import Mesh
 try:
@@ -81,6 +106,21 @@ try:
     NAIServingEngine(cfg, nai, params, g, mode="compiled",
                      mesh=Mesh(_np.array(jax.devices()[:2]), ("model",)))
     raise SystemExit("mesh without data axis should have raised")
+except ValueError:
+    pass
+try:
+    NAIServingEngine(cfg, nai, params, g, mode="compiled",
+                     gather_mode="ragged")
+    raise SystemExit("unknown gather_mode should have raised")
+except ValueError:
+    pass
+from repro.gnn.backends import get_backend, run_propagation
+from repro.gnn.nai import NAIConfig as _NC
+try:
+    run_propagation(get_backend("segment"),
+                    _NC(t_s=1.0, t_min=1, t_max=2), {}, np.zeros((256, 64)),
+                    256, mesh=make_serving_mesh(2), gather_mode="halo")
+    raise SystemExit("halo mode without halo operands should have raised")
 except ValueError:
     pass
 print("SHARDED_SERVING_OK")
