@@ -1,0 +1,553 @@
+"""Open-loop serving front-end benchmark: goodput and latency percentiles
+vs offered load, per SLO class, serial vs pipelined.
+
+The closed-loop serving bench (`benchmarks.serving_bench`) measures how
+fast the engine drains pre-formed batches; this bench measures what a
+deployment actually ships — a Poisson stream of single requests with
+per-class deadlines flowing through `repro.serving.frontend`. Two passes:
+
+**Deterministic virtual-time pass** (the ``--check`` CI gates). A fixed
+bursty arrival trace is replayed on a virtual clock, so batch
+composition depends only on the trace — not machine speed — and the
+structural claims are exactly testable:
+
+* ``parity_frontend_vs_direct`` — predictions and exit orders of every
+  front-end-served request are bit-identical to replaying the SAME
+  engine batches (regrouped via ``Request.batch_id``) through a fresh
+  direct `NAIServingEngine`. The front-end adds routing and deadlines,
+  never numerics.
+* ``parity_pipelined_vs_serial`` — a depth-2 front-end serves the trace
+  bit-identically to a depth-1 front-end (the batch former's triggers do
+  not depend on pipeline depth).
+* ``steady_compiles`` / ``steady_pack_allocs`` — per class, the third
+  identical trace replay (after two warm-ups grow the bucket high-water
+  marks and converge the pack pools) compiles nothing and allocates no
+  bucket-sized buffers.
+
+**Real-time open-loop pass** (the committed goodput record; timings are
+machine-dependent and advisory in CI). Per-class batch service time is
+calibrated on warm engines, then Poisson arrivals are offered at
+``load_frac`` in {0.5, 1.0, 2.0} of estimated aggregate capacity, split
+evenly across classes. Each class's deadline budget is a small multiple
+of its calibrated batch time, so **goodput** (answers within deadline /
+offered) discriminates: under-load runs complete nearly everything in
+budget, the 2.0 overload run sheds at the bounded queue and keeps the
+accepted requests' queueing delay — and therefore goodput — from
+collapsing. The highest-load level runs serial and pipelined
+front-ends on identical arrival traces (best of ``rounds``); the
+committed full run records ``pipelined_ge_serial`` there.
+
+Runnable standalone::
+
+    PYTHONPATH=src python -m benchmarks.frontend_bench [--smoke] [--check]
+                                                       [--out F]
+
+Full runs merge the payload under the ``"frontend"`` key of
+``BENCH_serving.json`` (so the serving trajectory stays one file);
+``--smoke`` writes a standalone ``BENCH_frontend_smoke.json``.
+``--check`` exits nonzero when a virtual-pass gate fails or a class
+records zero goodput — the CI guard.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+if __package__ in (None, ""):     # `python benchmarks/frontend_bench.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [_root, os.path.join(_root, "src")]
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.gnn import GNNConfig, init_classifiers, load_dataset
+from repro.gnn.nai import NAIConfig
+from repro.serving import NAIServingEngine, ServingFrontend, SLOClass
+
+IMPL = "segment"      # real async XLA CPU compute (interpret-mode Pallas
+                      # is emulation — open-loop timing would be noise)
+
+
+def _setup(smoke: bool):
+    """Same serving shape family as serving_bench, with a smaller batch
+    size — the front-end forms batches from single arrivals, so the age
+    trigger must be reachable inside a bench-sized run — and a wider
+    feature slice: this bench is segment-only (no interpret-mode Pallas
+    to keep small), and the device stage must carry real work for the
+    serial-vs-pipelined comparison to measure overlap rather than
+    Python-loop overhead."""
+    g = load_dataset("pubmed-like", scale=0.02 if smoke else 0.05, seed=0)
+    feat = 256
+    g = dataclasses.replace(
+        g, features=np.ascontiguousarray(g.features[:, :feat]))
+    cfg = GNNConfig("sgc", feat, g.num_classes, k=2, hidden=32,
+                    mlp_layers=2)
+    params = {"cls": init_classifiers(cfg, jax.random.PRNGKey(0))}
+    nai = NAIConfig(t_s=6.0, t_min=1, t_max=2,
+                    batch_size=16 if smoke else 32)
+    return g, cfg, params, nai
+
+
+def _classes(nai: NAIConfig, max_wait_s: float = 0.05) -> List[SLOClass]:
+    """The ROADMAP's two tiers: ``gold`` at the full T_max (accuracy),
+    ``best_effort`` at T_max = T_min (cheapest compiled shape). Budgets
+    and waits here are provisional — the open-loop pass re-derives them
+    from calibrated batch times."""
+    # 2 batches of bounded queueing: deep enough to ride out a burst,
+    # shallow enough that an accepted request's queueing delay stays
+    # well inside the deadline budget under overload
+    qd = 2 * nai.batch_size
+    return [
+        SLOClass("gold", nai, deadline_s=1.0, max_wait_s=max_wait_s,
+                 queue_depth=qd),
+        SLOClass("best_effort",
+                 dataclasses.replace(nai, t_max=nai.t_min),
+                 deadline_s=1.0, max_wait_s=max_wait_s, queue_depth=qd),
+    ]
+
+
+def _frontend(g, cfg, params, classes, depth: int) -> ServingFrontend:
+    return ServingFrontend(cfg, params, g, classes, mode="compiled",
+                           spmm_impl=IMPL, pipeline_depth=depth)
+
+
+# ------------------------------------------------- virtual-time trace
+def _trace(g, nai, n_bursts: int, seed: int = 0):
+    """Deterministic bursty arrivals: (virtual_time, class, node) tuples.
+    Bursts bigger than batch_size close batches on size; the lull after
+    each burst (longer than max_wait) ages the remainder out — both
+    former triggers fire on every replay, and partial batches visit the
+    smaller buckets."""
+    rng = np.random.default_rng(seed)
+    events: List[Tuple[float, str, int]] = []
+    t = 0.0
+    for _ in range(n_bursts):
+        size = int(rng.integers(nai.batch_size // 2,
+                                2 * nai.batch_size + 1))
+        nodes = rng.choice(g.test_idx, size=size, replace=True)
+        for nid in nodes:
+            cls = "gold" if rng.random() < 0.5 else "best_effort"
+            events.append((t, cls, int(nid)))
+            t += 1e-4
+        t += 0.2              # lull >> max_wait: age out the stragglers
+    return events
+
+
+def _replay_virtual(fe: ServingFrontend, events) -> List:
+    """Drive the front-end on the virtual clock; returns the submitted
+    `Request` objects (all completed — the trace ends with a drain)."""
+    reqs = []
+    for t, cls, nid in events:
+        r = fe.submit(nid, cls, now=t)
+        assert r is not None, "virtual trace must not overflow the lanes"
+        reqs.append(r)
+        fe.step(now=t)
+    t_end = events[-1][0] + 10.0
+    fe.step(now=t_end)        # age the final stragglers out
+    fe.flush()
+    return reqs
+
+
+def _direct_replay(g, cfg, params, classes, reqs) -> bool:
+    """Regroup the front-end's completions into the exact engine batches
+    it formed (`Request.batch_id`) and replay them through fresh direct
+    engines — same class configs, no front-end. Bit-identical
+    predictions and exit orders mean the front-end added routing, not
+    numerics."""
+    by_cls = {c.name: c for c in classes}
+    groups: Dict[Tuple[str, int], List] = defaultdict(list)
+    for r in reqs:
+        groups[(r.slo_class, r.batch_id)].append(r)
+    ok = True
+    for name, c in by_cls.items():
+        eng = NAIServingEngine(cfg, c.nai, params, g, max_wait_s=10.0,
+                               mode="compiled", spmm_impl=IMPL)
+        batches = sorted(k for k in groups if k[0] == name)
+        for key in batches:
+            orig = groups[key]
+            eng.submit([r.node_id for r in orig])
+            replay = eng.step()        # depth 1: completes immediately
+            for a, b in zip(orig, replay):
+                if (a.node_id != b.node_id
+                        or a.prediction != b.prediction
+                        or a.exit_order != b.exit_order):
+                    ok = False
+    return ok
+
+
+def _virtual_pass(g, cfg, params, nai, smoke: bool) -> Dict:
+    classes = _classes(nai)
+    events = _trace(g, nai, n_bursts=4 if smoke else 8)
+    serial = _frontend(g, cfg, params, classes, depth=1)
+    piped = _frontend(g, cfg, params, classes, depth=2)
+    runs = {}
+    for tag, fe in (("serial", serial), ("pipelined", piped)):
+        # warm replays: run 1 grows the bucket high-water marks (same
+        # trace ever after -> same supports -> HWMs are fixed), the rest
+        # converge the rotating pack pool — pipeline_depth + 1 slots per
+        # bucket, so deeper pipelines need more replays to touch them all
+        for _ in range(fe.pipeline_depth + 2):
+            _replay_virtual(fe, events)
+        base = {n: (e.jit_stats["compiles"], e.pack_stats["allocs"])
+                for n, e in fe.engines.items()}
+        reqs = _replay_virtual(fe, events)          # counted replay
+        runs[tag] = (fe, base, reqs)
+    fe_p, base_p, reqs_p = runs["pipelined"]
+    _, _, reqs_s = runs["serial"]
+    par_depth = all(
+        a.node_id == b.node_id and a.prediction == b.prediction
+        and a.exit_order == b.exit_order
+        for a, b in zip(reqs_s, reqs_p))
+    par_direct = _direct_replay(g, cfg, params, classes, reqs_p)
+    steady = {
+        tag: {n: {"steady_compiles": e.jit_stats["compiles"] - b[n][0],
+                  "steady_pack_allocs": e.pack_stats["allocs"] - b[n][1]}
+              for n, e in fe.engines.items()}
+        for tag, (fe, b, _) in runs.items()}
+    return {
+        "trace_requests": len(events),
+        "trace_batches": len({(r.slo_class, r.batch_id) for r in reqs_p}),
+        "parity_pipelined_vs_serial": bool(par_depth),
+        "parity_frontend_vs_direct": bool(par_direct),
+        "steady": steady,
+    }
+
+
+# -------------------------------------------------- open-loop goodput
+def _warm_engine(eng, g, batch_size: int, rng) -> None:
+    """Push every bucket high-water mark to its plateau before timing:
+    random node sets grow the support-size HWMs batch by batch, so a
+    fixed warm-up count leaves compile stalls inside the timed open-loop
+    runs (and one 100 ms compile amid 2 ms batches distorts a whole
+    level's goodput). Batches of the HIGHEST-degree test nodes pin the
+    support-size tail deterministically; random rounds then repeat until
+    a full round neither compiles nor allocates."""
+    heavy = np.asarray(g.test_idx)[
+        np.argsort(g.degrees[g.test_idx])[::-1]]
+    for s in range(8, batch_size + 1, 8):
+        for rep in range(eng.pipeline_depth + 2):
+            eng.submit(heavy[rep * s:(rep + 1) * s])
+            eng.step()
+    eng.flush()
+    for _ in range(10):
+        c0, a0 = eng.jit_stats["compiles"], eng.pack_stats["allocs"]
+        for s in range(8, batch_size + 1, 8):
+            for _ in range(eng.pipeline_depth + 2):
+                eng.submit(rng.choice(g.test_idx, size=s, replace=True))
+                eng.step()
+        eng.flush()
+        if eng.jit_stats["compiles"] == c0 \
+                and eng.pack_stats["allocs"] == a0:
+            return
+
+
+def _calibrate(engines: Dict[str, NAIServingEngine], g,
+               batch_size: int) -> Dict[str, float]:
+    """Per-class full-batch service time, measured closed-loop on the
+    ALREADY-WARM front-end engines that will serve the open-loop runs."""
+    out = {}
+    rng = np.random.default_rng(1)
+    for name, eng in engines.items():
+        times = []
+        for _ in range(7):
+            nodes = rng.choice(g.test_idx, size=batch_size, replace=False)
+            t0 = time.perf_counter()
+            eng.submit(nodes)
+            eng.step()
+            eng.flush()
+            times.append(time.perf_counter() - t0)
+        out[name] = float(np.median(times))
+    return out
+
+
+def _tuned_classes(nai, t_batch: Dict[str, float]) -> List[SLOClass]:
+    """Re-derive waits and budgets from calibrated batch times: a class
+    waits up to ~2 batch times to fill, and its deadline budget covers
+    the wait plus a few services' worth of queueing — tight enough that
+    an unbounded queue would blow it, loose enough that the bounded
+    queue keeps accepted requests inside it."""
+    out = []
+    for c in _classes(nai):
+        tb = t_batch[c.name]
+        wait = max(2.0 * tb, 1e-3)
+        # the budget covers the age wait plus the bounded queue's drain
+        # time with headroom for two effects the calibration can't see:
+        # both class engines contend for the same cores (~2x per-batch
+        # latency when both are busy) and a depth-2 pipeline holds one
+        # extra batch in flight — the budget must sit clear of the
+        # overload latency cliff, so goodput measures service rate, not
+        # which side of the cliff the noise landed on
+        out.append(dataclasses.replace(
+            c, max_wait_s=wait, deadline_s=wait + 16.0 * tb))
+    return out
+
+
+def _poisson_events(g, rates: Dict[str, float], duration: float, seed: int):
+    """Merged per-class Poisson arrivals: (t, class, node), time-sorted."""
+    rng = np.random.default_rng(seed)
+    events = []
+    for cls, rate in rates.items():
+        t = rng.exponential(1.0 / rate)
+        while t < duration:
+            events.append((t, cls, int(rng.choice(g.test_idx))))
+            t += rng.exponential(1.0 / rate)
+    events.sort()
+    return events
+
+
+def _open_loop_run(fe: ServingFrontend, events, duration: float) -> Dict:
+    """Offer the trace in real time (open loop: arrivals don't wait for
+    the server), then drain. Each request's arrival — and therefore its
+    deadline and measured latency — is stamped at the trace's INTENDED
+    event time, not when the submit loop got to it, so a busy server
+    can't launder its own queueing delay (coordinated omission)."""
+    fe.reset_stats()
+    start = time.perf_counter()
+    i = 0
+    deadline_guard = start + duration + 30.0
+    while True:
+        now = time.perf_counter()
+        while i < len(events) and events[i][0] <= now - start:
+            t_ev, cls, nid = events[i]
+            fe.submit(nid, cls, now=start + t_ev)
+            i += 1
+        fe.step()
+        if i >= len(events) and fe.pending() == 0:
+            break
+        if now > deadline_guard:      # wedged run: report what completed
+            fe.flush()
+            break
+    wall = time.perf_counter() - start
+    return {"wall_s": round(wall, 3), "classes": fe.summary()}
+
+
+def _class_row(s: Dict) -> Dict:
+    return {"offered": s["offered"], "accepted": s["accepted"],
+            "rejected": s["rejected"], "completed": s["completed"],
+            "deadline_hits": s["deadline_hits"],
+            "deadline_misses": s["deadline_misses"],
+            "goodput_frac": round(s["goodput_frac"], 4),
+            "p50_ms": round(s["p50_ms"], 3),
+            "p99_ms": round(s["p99_ms"], 3)}
+
+
+def _open_loop_pass(g, cfg, params, nai, smoke: bool) -> Dict:
+    # build both front-ends first, warm every engine to compile
+    # quiescence, and only then calibrate — capacity estimated on a
+    # still-compiling engine is fiction, and the timed runs must see
+    # zero compile stalls
+    frontends = {d: _frontend(g, cfg, params, _classes(nai), depth=d)
+                 for d in (1, 2)}
+    rng = np.random.default_rng(2)
+    for fe in frontends.values():
+        for eng in fe.engines.values():
+            _warm_engine(eng, g, nai.batch_size, rng)
+    t_batch = _calibrate(frontends[1].engines, g, nai.batch_size)
+    classes = _tuned_classes(nai, t_batch)
+    # SLOClass is frozen; swap the tuned tiers into the live front-ends
+    # (budgets are read per submit, max_wait lives on the engine)
+    for fe in frontends.values():
+        for c in classes:
+            fe.classes[c.name] = c
+            fe.engines[c.name].max_wait_s = c.max_wait_s
+    capacity = {c.name: nai.batch_size / t_batch[c.name] for c in classes}
+
+    # split the offered load evenly across classes: both engines share
+    # the same cores, so "1.0" means the MACHINE is at estimated capacity
+    def rates_for(frac):
+        return {n: max(frac * cap / 2.0, 1.0)
+                for n, cap in capacity.items()}
+
+    duration = 0.4 if smoke else 1.5
+    load_fracs = (0.5, 1.0, 2.0)
+    # best of 2 rounds at every level: a stray compile (an unlucky node
+    # set past the warmed HWM tail) or scheduler hiccup wrecks one round,
+    # not the level
+    rounds = 2
+    loads = []
+    for frac in load_fracs:
+        rates = rates_for(frac)
+        events = _poisson_events(g, rates, duration, seed=int(10 * frac))
+        per_cfg = {}
+        # the highest level carries the serial-vs-pipelined record —
+        # give it one extra round
+        n_rounds = rounds + 1 if frac == load_fracs[-1] else rounds
+        for tag, depth in (("serial", 1), ("pipelined", 2)):
+            best = None
+            for _ in range(n_rounds):
+                res = _open_loop_run(frontends[depth], events, duration)
+                good = sum(c["deadline_hits"]
+                           for c in res["classes"].values())
+                if best is None or good > best[0]:
+                    best = (good, res)
+            per_cfg[tag] = {
+                "wall_s": best[1]["wall_s"],
+                "classes": {n: _class_row(s)
+                            for n, s in best[1]["classes"].items()}}
+        loads.append({
+            "load_frac": frac,
+            "offered_req_per_s": {n: round(r, 1)
+                                  for n, r in rates.items()},
+            **per_cfg})
+    top = loads[-1]
+    good = {tag: sum(c["deadline_hits"]
+                     for c in top[tag]["classes"].values())
+            for tag in ("serial", "pipelined")}
+    return {
+        "impl": IMPL,
+        "duration_s": duration,
+        "batch_service_s": {n: round(t, 5) for n, t in t_batch.items()},
+        "capacity_req_per_s": {n: round(c, 1)
+                               for n, c in capacity.items()},
+        "classes": {c.name: {
+            "t_max": c.nai.t_max, "batch_size": c.nai.batch_size,
+            "max_wait_ms": round(1e3 * c.max_wait_s, 2),
+            "deadline_ms": round(1e3 * c.deadline_s, 2),
+            "queue_depth": c.queue_depth} for c in classes},
+        "loads": loads,
+        "highest_load_comparison": {
+            "load_frac": top["load_frac"],
+            "serial_goodput": good["serial"],
+            "pipelined_goodput": good["pipelined"],
+            "pipelined_ge_serial": good["pipelined"] >= good["serial"],
+        },
+    }
+
+
+def collect(smoke: bool = False) -> Dict:
+    g, cfg, params, nai = _setup(smoke)
+    return {
+        "bench": "frontend_bench",
+        "smoke": bool(smoke),
+        "unix_time": time.time(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "shape": {"batch_size": nai.batch_size,
+                  "feat": int(g.features.shape[1]),
+                  "n": g.n, "impl": IMPL},
+        "structural": _virtual_pass(g, cfg, params, nai, smoke),
+        "open_loop": _open_loop_pass(g, cfg, params, nai, smoke),
+    }
+
+
+def check(payload: Dict) -> List[str]:
+    """CI gates. Structural (virtual-time, deterministic): both parities
+    and zero steady-state compiles/allocs per class per depth. Open loop
+    (real time): every class must record nonzero goodput somewhere —
+    machine-speed-proof, unlike the load-curve shapes."""
+    errs = []
+    st = payload["structural"]
+    if not st["parity_pipelined_vs_serial"]:
+        errs.append("pipelined front-end diverged from serial on the "
+                    "virtual trace (predictions/exit orders)")
+    if not st["parity_frontend_vs_direct"]:
+        errs.append("front-end-served predictions diverged from direct "
+                    "engine serving of the same batches")
+    for tag, per_cls in st["steady"].items():
+        for name, c in per_cls.items():
+            if c["steady_compiles"] > 0:
+                errs.append(f"{tag}/{name}: {c['steady_compiles']} jit "
+                            f"compiles in steady state")
+            if c["steady_pack_allocs"] > 0:
+                errs.append(f"{tag}/{name}: {c['steady_pack_allocs']} "
+                            f"bucket-sized pack allocations in steady "
+                            f"state")
+    hits = defaultdict(int)
+    for load in payload["open_loop"]["loads"]:
+        for tag in ("serial", "pipelined"):
+            for name, c in load[tag]["classes"].items():
+                hits[(tag, name)] += c["deadline_hits"]
+    for (tag, name), h in sorted(hits.items()):
+        if h == 0:
+            errs.append(f"open_loop/{tag}/{name}: zero goodput across "
+                        f"every load level")
+    return errs
+
+
+def _rows(payload: Dict) -> List[str]:
+    rows = []
+    for load in payload["open_loop"]["loads"]:
+        for tag in ("serial", "pipelined"):
+            for name, c in load[tag]["classes"].items():
+                rname = (f"frontend/{tag}/{name}/"
+                         f"load{load['load_frac']}")
+                us = 1e3 * c["p99_ms"]
+                derived = (
+                    f"goodput_frac={c['goodput_frac']};"
+                    f"offered={c['offered']};rejected={c['rejected']};"
+                    f"deadline_hits={c['deadline_hits']};"
+                    f"p50_ms={c['p50_ms']};p99_ms={c['p99_ms']}")
+                rows.append(csv_row(rname, us, derived))
+    st = payload["structural"]
+    rows.append(csv_row(
+        "frontend/structural", 0.0,
+        f"parity_direct={st['parity_frontend_vs_direct']};"
+        f"parity_depth={st['parity_pipelined_vs_serial']};"
+        f"trace_requests={st['trace_requests']};"
+        f"trace_batches={st['trace_batches']}"))
+    return rows
+
+
+def run() -> list:
+    return _rows(collect(smoke=True))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / short runs (CI smoke job)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero on a parity/steady-state/goodput "
+                         "gate failure")
+    ap.add_argument("--out", default="",
+                    help="JSON output path (default: merge under the "
+                         "'frontend' key of BENCH_serving.json; with "
+                         "--smoke, standalone BENCH_frontend_smoke.json)")
+    args = ap.parse_args()
+    payload = collect(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for r in _rows(payload):
+        print(r, flush=True)
+    if args.out:
+        out_path, merge = args.out, args.out == "BENCH_serving.json"
+    elif args.smoke:
+        out_path, merge = "BENCH_frontend_smoke.json", False
+    else:
+        out_path, merge = "BENCH_serving.json", True
+    if merge and os.path.exists(out_path):
+        with open(out_path) as fh:
+            doc = json.load(fh)
+        doc["frontend"] = payload
+    else:
+        doc = payload
+    with open(out_path, "w") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
+    print(f"# wrote {out_path}")
+    cmp_ = payload["open_loop"]["highest_load_comparison"]
+    if not cmp_["pipelined_ge_serial"]:
+        # timing-dependent, so advisory (a contended runner can flip it);
+        # the committed full-size record is the claim
+        print(f"WARNING: pipelined goodput < serial at load "
+              f"{cmp_['load_frac']} ({cmp_['pipelined_goodput']} vs "
+              f"{cmp_['serial_goodput']}) — noise on this run?",
+              file=sys.stderr)
+    if args.check:
+        errs = check(payload)
+        for e in errs:
+            print(f"GATE FAILURE: {e}", file=sys.stderr)
+        if errs:
+            sys.exit(1)
+        print("# frontend gates OK (parity, 0 steady compiles/allocs, "
+              "goodput > 0 per class)")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: table3,table5,table6,table7,fig2,fig3,"
                          "roofline,kernels,ablation,serving,"
-                         "serving_sharded")
+                         "serving_sharded,frontend")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -64,6 +64,9 @@ def main() -> None:
     if only is None or "serving_sharded" in only:
         from benchmarks.serving_bench import run_sharded as sbs
         suites.append(("serving_sharded", sbs))
+    if only is None or "frontend" in only:
+        from benchmarks.frontend_bench import run as fb
+        suites.append(("frontend", fb))
 
     print("name,us_per_call,derived")
     failures = 0

@@ -22,6 +22,8 @@ helper documents how a feature-sharded deployment would reduce Eq. 8.
 """
 from __future__ import annotations
 
+from types import SimpleNamespace
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -31,7 +33,6 @@ from jax.experimental.shard_map import shard_map
 
 from repro.gnn.backends import get_backend, pack_operands, run_propagation
 from repro.gnn.graph import Graph, edge_coefficients
-from repro.gnn.nai import NAIConfig
 from repro.gnn.packing import (pack_support, shard_batch_perm,
                                step_active_blocks)
 from repro.gnn.sampler import Support
@@ -91,9 +92,12 @@ def distributed_series(mesh, g: Graph, k: int, r: float = 0.5,
     be, packed = pack_graph(g, D, r, spmm_impl, nb_bucket=nb_bucket,
                             s_bucket=s_bucket, tb_bucket=tb_bucket,
                             halo=halo)
-    # t_min > t_max: the threshold sentinel stays negative on every step,
-    # so no node ever exits and the loop is pure propagation
-    nai = NAIConfig(t_s=0.0, t_min=k + 1, t_max=k)
+    # t_min > t_max keeps the threshold sentinel negative on every step,
+    # so no node ever exits and the loop is pure propagation. NAIConfig
+    # itself rejects that combination (a real serving config with it
+    # silently returns -1 predictions), so this propagation-only use
+    # passes the loop the raw attributes instead of a validated config.
+    nai = SimpleNamespace(t_s=0.0, t_min=k + 1, t_max=k)
     sa = (step_active_blocks(packed.hop_rb, k) if be.uses_tiles else None)
     ops = {key: jnp.asarray(v)
            for key, v in pack_operands(be, packed, sa).items()}

@@ -32,15 +32,32 @@ class Graph:
     _order: Optional[np.ndarray] = None
 
     @property
+    def num_self_loops(self) -> int:
+        """Count of explicitly stored self loops. The full graph carries
+        one per node (`add_self_loops`), but `train_subgraph()` keeps
+        only the loops of retained nodes — so this is counted, never
+        assumed to equal n."""
+        return int((self.src == self.dst).sum())
+
+    @property
     def num_edges(self) -> int:
-        """Undirected edge count m (each stored twice, minus self loops)."""
-        return (len(self.src) - self.n) // 2
+        """Undirected edge count m (each stored twice; self loops stored
+        once and excluded). Counts actual self loops rather than assuming
+        one per node: after `train_subgraph()` only kept nodes retain
+        theirs, and the old `(E - n) // 2` undercounted by
+        (n - n_train) / 2 — going negative on small splits and poisoning
+        the `stationary_weights` denominator 2m + n."""
+        return (len(self.src) - self.num_self_loops) // 2
 
     @property
     def degrees(self) -> np.ndarray:
-        """Degree WITHOUT self loop (d_i in the paper)."""
+        """Degree WITHOUT self loop (d_i in the paper). Subtracts each
+        node's actual stored self loops, so nodes whose loop was dropped
+        by `train_subgraph()` report 0, not -1."""
         deg = np.bincount(self.dst, minlength=self.n)
-        return (deg - 1).astype(np.int64)  # self loops are stored explicitly
+        loops = np.bincount(self.dst[self.src == self.dst],
+                            minlength=self.n)
+        return (deg - loops).astype(np.int64)
 
     def csr(self) -> Tuple[np.ndarray, np.ndarray]:
         """(indptr, neighbors) sorted by dst: in-neighbors of each node."""

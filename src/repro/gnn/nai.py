@@ -39,6 +39,26 @@ class NAIConfig:
     t_max: int = 2          # maximum propagation order (<= k)
     batch_size: int = 500   # paper evaluates with batch 500
 
+    def __post_init__(self):
+        """Fail loudly on configs that would serve garbage silently:
+        t_min > t_max makes `infer_batch_host` return all-(-1)
+        predictions with exit order 0 and no error. The serving
+        front-end's SLO classes construct these configs programmatically
+        (`dataclasses.replace` re-runs this check), so a bad tier
+        definition must raise at construction, not at serve time."""
+        if self.t_min < 1:
+            raise ValueError(f"t_min must be >= 1, got {self.t_min}")
+        if self.t_min > self.t_max:
+            raise ValueError(
+                f"t_min ({self.t_min}) > t_max ({self.t_max}): no "
+                f"propagation order would ever classify, every "
+                f"prediction would be -1")
+        if self.t_s < 0:
+            raise ValueError(f"t_s must be >= 0, got {self.t_s}")
+        if self.batch_size < 1:
+            raise ValueError(
+                f"batch_size must be >= 1, got {self.batch_size}")
+
 
 @dataclasses.dataclass
 class NAIResult:

@@ -95,7 +95,9 @@ def sample_support(g: Graph, batch: np.ndarray, hops: int, r: float
     dst = dst_all[keep].astype(np.int32)
 
     coef = _edge_coefs(g, nodes, src, dst, r)
-    sub_edges = (len(src) - len(nodes)) // 2   # self loops included once
+    # count actual self loops (not one-per-node: graphs whose loops were
+    # dropped, e.g. a train subgraph, would undercount otherwise)
+    sub_edges = (len(src) - int((src == dst).sum())) // 2
     return Support(nodes=nodes, hop=hop, n_batch=len(batch), src=src,
                    dst=dst, coef=coef, sub_edges=max(sub_edges, 0))
 
@@ -146,7 +148,7 @@ def sample_support_legacy(g: Graph, batch: np.ndarray, hops: int, r: float
     dst = np.asarray(dsts, np.int32)
 
     coef = _edge_coefs(g, nodes, src, dst, r)
-    sub_edges = (len(src) - len(nodes)) // 2   # self loops included once
+    sub_edges = (len(src) - int((src == dst).sum())) // 2
     return Support(nodes=nodes, hop=np.asarray(hop_of, np.int32),
                    n_batch=len(batch), src=src, dst=dst, coef=coef,
                    sub_edges=max(sub_edges, 0))

@@ -1,10 +1,19 @@
 """Batched NAI serving engine (the paper's deployment scenario: streaming
 inference over unseen nodes with latency constraints).
 
-Requests (node ids) arrive on a queue; the batch former groups them up to
-`batch_size` or `max_wait_s`; each batch runs Algorithm 1. Latency
-percentiles and the exit-order histogram are tracked per engine — the
-quantities a production deployment would alarm on.
+Requests (node ids) arrive on a queue; the batch former (`form_batch`)
+closes a batch on size OR age — a full `batch_size` immediately, a
+partial batch once its oldest request has waited `max_wait_s` — and each
+batch runs Algorithm 1. Two stepping entry points: `step()` is the
+closed-loop path (serve whatever is queued now; benchmarks submit
+pre-formed batches), `poll(now)` is the open-loop path driven by the
+deadline-aware front-end (`repro.serving.frontend`) — it respects the
+batch former's triggers and advances the pipeline non-blockingly on
+quiet ticks. Latency percentiles and the exit-order histogram are
+tracked per engine — the quantities a production deployment would alarm
+on. Requests carry optional absolute deadlines and an SLO class tag;
+the engine itself is deadline-agnostic (goodput accounting lives in the
+front-end).
 
 Two serving modes:
 
@@ -107,9 +116,18 @@ from repro.sharding.logical import spec
 class Request:
     node_id: int
     arrival_s: float
+    deadline_s: float = float("inf")   # ABSOLUTE completion deadline
+    slo_class: str = ""                # routing tier (serving front-end)
     done_s: float = -1.0
     prediction: int = -1
     exit_order: int = -1
+    batch_id: int = -1                 # engine batch this completed in
+
+    @property
+    def within_deadline(self) -> bool:
+        """Completed in time (the goodput numerator). False while the
+        request is still pending."""
+        return 0.0 <= self.done_s <= self.deadline_s
 
 
 class LatencyRing:
@@ -391,10 +409,12 @@ class NAIServingEngine:
 
     def _complete(self, batch: List[Request], preds, orders,
                   done: float) -> None:
+        bid = self.stats.batches
         for r, p, o in zip(batch, preds, orders):
             r.done_s = done
             r.prediction = int(p)
             r.exit_order = int(o)
+            r.batch_id = bid
             self.stats.latencies.append(done - r.arrival_s)
             self.stats.exit_hist[int(o)] = \
                 self.stats.exit_hist.get(int(o), 0) + 1
@@ -406,26 +426,64 @@ class NAIServingEngine:
         for nid in np.atleast_1d(node_ids):
             self.queue.append(Request(int(nid), now))
 
-    def _form_batch(self) -> List[Request]:
+    def submit_request(self, req: Request) -> None:
+        """Enqueue a pre-built request (the front-end path: deadline and
+        SLO class already stamped by `repro.serving.frontend`)."""
+        self.queue.append(req)
+
+    def form_batch(self, now: Optional[float] = None, *,
+                   force: bool = False) -> List[Request]:
+        """Deadline-aware batch former: close a batch on size OR age,
+        whichever comes first. A full `batch_size` closes immediately;
+        a partial batch closes only once its oldest request has waited
+        `max_wait_s` — and then it closes UNCONDITIONALLY, taking
+        everything queued (up to batch_size). The latency bound takes
+        priority over batch fill: there is no minimum-fill guard (the
+        old `batch_size // 4` gate held post-deadline batches hostage to
+        fill — and degenerated them to size 1 whenever batch_size <= 3).
+        Returns [] while neither trigger has fired.
+
+        `now` defaults to the wall clock; pass an explicit timestamp to
+        drive the former on a virtual clock (deterministic tests/parity
+        replays). `force=True` (the closed-loop benchmark path and
+        `flush`) closes whatever is queued immediately."""
+        if not self.queue:
+            return []
+        if not force:
+            now = time.perf_counter() if now is None else now
+            aged = now - self.queue[0].arrival_s >= self.max_wait_s
+            if len(self.queue) < self.nai.batch_size and not aged:
+                return []           # neither size nor age has closed it
         batch: List[Request] = []
-        deadline = (self.queue[0].arrival_s + self.max_wait_s
-                    if self.queue else 0.0)
         while self.queue and len(batch) < self.nai.batch_size:
             batch.append(self.queue.popleft())
-            if time.perf_counter() > deadline and len(batch) >= 1:
-                # latency bound takes priority over batch fill
-                if len(batch) >= self.nai.batch_size // 4:
-                    break
         return batch
 
-    def step(self) -> List[Request]:
-        """Serve one batch; returns completed requests. With
-        pipeline_depth > 1 the completed requests belong to an EARLIER
-        batch (or none while the pipeline fills) — call `flush()` after
-        the last `step()` to drain the in-flight tail."""
-        batch = self._form_batch()
-        if not batch:
-            return self.flush()
+    def _advance(self, opportunistic: bool = False) -> List[Request]:
+        """Finalize only batches already past the pipeline depth — the
+        empty-queue path must NOT drain the pipeline (a momentarily
+        empty queue under bursty arrivals is exactly when overlap
+        matters; a full drain is a sync barrier that silently degrades
+        pipeline_depth=2 to serial). `flush()` stays the explicit drain.
+
+        `opportunistic=True` (the front-end's `poll`) additionally
+        finalizes in-flight batches whose device results are ALREADY
+        complete — `jax.Array.is_ready` makes that a non-blocking check,
+        so completions surface promptly during arrival lulls without
+        ever stalling on unfinished device work."""
+        done: List[Request] = []
+        while len(self._inflight) >= self.pipeline_depth:
+            done += self._finalize_oldest()
+        if opportunistic:
+            while self._inflight:
+                ready = getattr(self._inflight[0].preds_dev,
+                                "is_ready", None)
+                if ready is None or not ready():
+                    break
+                done += self._finalize_oldest()
+        return done
+
+    def _serve_batch(self, batch: List[Request]) -> List[Request]:
         nodes = np.asarray([r.node_id for r in batch])
         # dedupe per batch (client retries): the sampler requires
         # duplicate-free batches — duplicated rows would double-count in
@@ -448,6 +506,32 @@ class NAIServingEngine:
         while len(self._inflight) >= self.pipeline_depth:
             done += self._finalize_oldest()
         return done
+
+    def step(self) -> List[Request]:
+        """Closed-loop step: serve whatever is queued RIGHT NOW (up to
+        batch_size), without waiting on the batch former's size/age
+        triggers — callers on this path (benchmarks, run_until_drained)
+        submit pre-formed batches. Returns completed requests; with
+        pipeline_depth > 1 those belong to an EARLIER batch (or none
+        while the pipeline fills/idles) — call `flush()` after the last
+        `step()` to drain the in-flight tail. An empty queue only
+        advances the pipeline (no drain barrier)."""
+        batch = self.form_batch(force=True)
+        if not batch:
+            return self._advance()
+        return self._serve_batch(batch)
+
+    def poll(self, now: Optional[float] = None) -> List[Request]:
+        """Open-loop serving step (the front-end path): dispatch a batch
+        only if size OR age has closed one (`form_batch`), otherwise
+        advance the pipeline non-blockingly — finalizing batches past
+        the pipeline depth plus any whose device results are already
+        complete. Never blocks on unfinished device work and never
+        serves a partial batch before its age bound."""
+        batch = self.form_batch(now)
+        if not batch:
+            return self._advance(opportunistic=True)
+        return self._serve_batch(batch)
 
     def flush(self) -> List[Request]:
         """Sync and complete every in-flight batch (no-op when serial)."""

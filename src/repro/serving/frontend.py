@@ -1,0 +1,243 @@
+"""Deadline-aware serving front-end with SLO classes.
+
+Production traffic is a Poisson stream of single requests with
+heterogeneous deadlines — not the pre-formed fixed-size batches the
+engine's closed-loop benchmarks feed it. The front-end turns the former
+into the latter:
+
+* **Request queue with backpressure** — each SLO class owns a bounded
+  lane (`queue_depth`); a submit beyond the bound is rejected (shed)
+  immediately instead of queued into a certain deadline miss. Shedding
+  keeps the queueing delay of every ACCEPTED request bounded by
+  roughly `queue_depth / service_rate`, which is what lets goodput track
+  throughput under overload instead of collapsing.
+
+* **Deadline-aware batch former** — dispatch rides the engine's
+  `form_batch`: a batch closes on size OR age, whichever fires first
+  (a full `batch_size` immediately; a partial batch once its oldest
+  request has waited the class's `max_wait_s` — unconditionally, with
+  no minimum-fill guard). `step(now)` polls every lane; quiet ticks
+  advance the engine pipelines non-blockingly, so `pipeline_depth=2`
+  engines keep their host/device overlap under bursty arrivals.
+
+* **SLO classes** — the paper's deployment claim is that "the trade-off
+  between accuracy and inference latency can be flexibly controlled by
+  simple hyper-parameters to match different latency constraints of
+  application scenarios": T_max/T_min are those hyper-parameters, and
+  the front-end turns them into per-request latency tiers. Each class
+  (e.g. ``gold`` / ``best_effort``) routes to its own
+  `NAIServingEngine` compiled at the class's `NAIConfig` — gold at a
+  high T_max (full accuracy, more propagation), best-effort at a low
+  one (cheap, fast) — while the {1,2,3}·2^k bucket policy keeps each
+  engine's compiled-shape set small. A request's class picks its
+  engine; its deadline (class default or per-request override) is
+  carried on the `Request` and scored at completion.
+
+**Goodput** — answers delivered within their deadline — is the
+front-end's currency: `ClassStats` counts offered / accepted / rejected
+/ completed / deadline hits+misses per class, and `summary()` merges
+those with the per-engine latency percentiles. `benchmarks/
+frontend_bench.py` sweeps offered load open-loop and records the
+goodput-vs-load curve into BENCH_serving.json.
+
+Every method takes an optional ``now`` so the whole front-end can run on
+a virtual clock: batch formation then depends only on the submitted
+timestamps, making runs deterministic — the property the parity tests
+(front-end == direct engine serving, pipelined == serial) and the
+zero-steady-state-compile gates are built on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.gnn.nai import NAIConfig
+from repro.serving.engine import (EngineStats, LatencyRing,
+                                  NAIServingEngine, Request)
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One latency tier: a name, the engine config it compiles
+    (the T_max knob), its default per-request latency budget, the batch
+    former's age bound, and the backpressure depth of its lane."""
+    name: str
+    nai: NAIConfig
+    deadline_s: float            # default latency budget per request
+    max_wait_s: float            # close a partial batch at this age
+    queue_depth: int = 256       # reject (shed) submits beyond this
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("SLO class needs a non-empty name")
+        if self.deadline_s <= 0:
+            raise ValueError(f"{self.name}: deadline_s must be > 0, "
+                             f"got {self.deadline_s}")
+        if self.max_wait_s < 0:
+            raise ValueError(f"{self.name}: max_wait_s must be >= 0, "
+                             f"got {self.max_wait_s}")
+        if self.queue_depth < 1:
+            raise ValueError(f"{self.name}: queue_depth must be >= 1, "
+                             f"got {self.queue_depth}")
+
+
+def default_slo_classes(base: NAIConfig, *, gold_deadline_s: float = 0.5,
+                        best_effort_deadline_s: float = 0.2,
+                        gold_max_wait_s: float = 0.05,
+                        best_effort_max_wait_s: float = 0.02,
+                        queue_depth: Optional[int] = None
+                        ) -> Sequence[SLOClass]:
+    """The two-tier default: ``gold`` serves at the base config's full
+    T_max (accuracy tier), ``best_effort`` at T_max = T_min (cheapest
+    compiled shape, fastest answer). Both reuse the base batch size so
+    their bucket series coincide."""
+    qd = queue_depth if queue_depth is not None else 4 * base.batch_size
+    return (
+        SLOClass("gold", base, deadline_s=gold_deadline_s,
+                 max_wait_s=gold_max_wait_s, queue_depth=qd),
+        SLOClass("best_effort",
+                 dataclasses.replace(base, t_max=base.t_min),
+                 deadline_s=best_effort_deadline_s,
+                 max_wait_s=best_effort_max_wait_s, queue_depth=qd),
+    )
+
+
+@dataclasses.dataclass
+class ClassStats:
+    offered: int = 0          # every submit attempt
+    accepted: int = 0         # made it past backpressure
+    rejected: int = 0         # shed at submit (lane full)
+    completed: int = 0
+    deadline_hits: int = 0    # completed within budget (goodput)
+    deadline_misses: int = 0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "offered": self.offered, "accepted": self.accepted,
+            "rejected": self.rejected, "completed": self.completed,
+            "deadline_hits": self.deadline_hits,
+            "deadline_misses": self.deadline_misses,
+            "goodput_frac": self.deadline_hits / max(self.offered, 1),
+        }
+
+
+class ServingFrontend:
+    """Routes single requests into per-SLO-class `NAIServingEngine`s.
+
+    ``classes`` is an ordered sequence of `SLOClass`; the first is the
+    default routing target. Engine construction kwargs (``spmm_impl``,
+    ``interpret``, ``mesh``, ``gather_mode``, ``donate``,
+    ``latency_window``) pass through to every class engine; each engine
+    gets its class's `NAIConfig` and `max_wait_s`.
+    """
+
+    def __init__(self, cfg, params, graph,
+                 classes: Sequence[SLOClass], *, mode: str = "compiled",
+                 pipeline_depth: int = 1, latency_window: int = 4096,
+                 **engine_kwargs):
+        if not classes:
+            raise ValueError("need at least one SLO class")
+        names = [c.name for c in classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate SLO class names: {names}")
+        self.classes: Dict[str, SLOClass] = {c.name: c for c in classes}
+        self.default_class = classes[0].name
+        self.pipeline_depth = pipeline_depth
+        self.engines: Dict[str, NAIServingEngine] = {
+            c.name: NAIServingEngine(
+                cfg, c.nai, params, graph, max_wait_s=c.max_wait_s,
+                mode=mode, pipeline_depth=pipeline_depth,
+                latency_window=latency_window, **engine_kwargs)
+            for c in classes}
+        self.stats: Dict[str, ClassStats] = {
+            c.name: ClassStats() for c in classes}
+
+    # ---------------------------------------------------------- ingress
+    def submit(self, node_id: int, slo_class: Optional[str] = None,
+               now: Optional[float] = None,
+               budget_s: Optional[float] = None) -> Optional[Request]:
+        """Route one request into its class lane. Returns the `Request`
+        if accepted, None if shed by backpressure (lane at
+        `queue_depth`). ``budget_s`` overrides the class's default
+        latency budget; the absolute deadline is stamped on the request
+        as ``arrival + budget``."""
+        name = self.default_class if slo_class is None else slo_class
+        if name not in self.classes:
+            raise KeyError(f"unknown SLO class {name!r} "
+                           f"(one of {sorted(self.classes)})")
+        c, eng, st = self.classes[name], self.engines[name], self.stats[name]
+        st.offered += 1
+        if len(eng.queue) >= c.queue_depth:
+            st.rejected += 1
+            return None
+        now = time.perf_counter() if now is None else now
+        budget = c.deadline_s if budget_s is None else budget_s
+        req = Request(int(node_id), now, deadline_s=now + budget,
+                      slo_class=name)
+        eng.submit_request(req)
+        st.accepted += 1
+        return req
+
+    # ----------------------------------------------------------- egress
+    def _account(self, completed: List[Request]) -> List[Request]:
+        for r in completed:
+            st = self.stats[r.slo_class]
+            st.completed += 1
+            if r.within_deadline:
+                st.deadline_hits += 1
+            else:
+                st.deadline_misses += 1
+        return completed
+
+    def step(self, now: Optional[float] = None) -> List[Request]:
+        """Poll every class lane once: dispatch batches the former has
+        closed (size or age), advance pipelines non-blockingly
+        otherwise. Returns newly completed requests across classes."""
+        done: List[Request] = []
+        for eng in self.engines.values():
+            done += self._account(eng.poll(now))
+        return done
+
+    def flush(self) -> List[Request]:
+        """Explicit drain: force-close every partial batch still queued,
+        then sync every in-flight batch. The end-of-stream path — never
+        called on the hot serving loop."""
+        done: List[Request] = []
+        for eng in self.engines.values():
+            while eng.queue:
+                done += self._account(eng.step())
+            done += self._account(eng.flush())
+        return done
+
+    # ------------------------------------------------------------ stats
+    def pending(self) -> int:
+        """Requests accepted but not yet completed (queued + in flight)."""
+        return sum(len(eng.queue)
+                   + sum(len(fl.requests) for fl in eng._inflight)
+                   for eng in self.engines.values())
+
+    def reset_stats(self) -> None:
+        """Zero the per-class counters and per-engine latency stats
+        (bench warm-up boundary). Compile caches, pack pools, and
+        high-water marks are deliberately kept — steady state is the
+        point of resetting."""
+        for name, eng in self.engines.items():
+            eng.stats = EngineStats(
+                latencies=LatencyRing(eng.stats.latencies.capacity))
+            eng.batch_timings.clear()
+            self.stats[name] = ClassStats()
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-class goodput counters merged with the class engine's
+        latency percentiles and structural counters."""
+        out: Dict[str, Dict[str, float]] = {}
+        for name, eng in self.engines.items():
+            s = self.stats[name].summary()
+            es = eng.stats.summary()
+            s.update(p50_ms=es["p50_ms"], p95_ms=es["p95_ms"],
+                     p99_ms=es["p99_ms"], batches=es["batches"],
+                     jit_compiles=eng.jit_stats["compiles"],
+                     pack_allocs=eng.pack_stats["allocs"])
+            out[name] = s
+        return out

@@ -101,7 +101,13 @@ def test_pipeline_depth_validation(setup):
                          pipeline_depth=2)
 
 
-def test_step_on_empty_queue_flushes(setup, stream):
+def test_step_on_empty_queue_keeps_pipeline(setup, stream):
+    """An empty queue must NOT drain the pipeline: a momentarily empty
+    queue under bursty arrivals is exactly when host/device overlap
+    matters, and the old `return self.flush()` was a sync barrier that
+    silently degraded depth-2 to serial. Batches within the pipeline
+    depth stay in flight across empty-queue steps; `flush()` remains the
+    explicit drain."""
     g, cfg, params, nai = setup
     eng = NAIServingEngine(cfg, nai, params, g, max_wait_s=10.0,
                            mode="compiled", spmm_impl="segment",
@@ -109,8 +115,14 @@ def test_step_on_empty_queue_flushes(setup, stream):
     eng.submit(stream[0])
     assert eng.step() == []              # pipe filling
     assert len(eng._inflight) == 1
-    done = eng.step()                    # empty queue -> drains in-flight
-    assert len(done) == len(stream[0])
+    assert eng.step() == []              # empty queue: pipeline kept
+    assert len(eng._inflight) == 1       # still in flight, no barrier
+    eng.submit(stream[1])
+    done = eng.step()                    # next batch pushes depth to 2
+    assert len(done) == len(stream[0])   # -> oldest finalized (FIFO)
+    assert len(eng._inflight) == 1
+    done = eng.flush()                   # explicit drain
+    assert len(done) == len(stream[1])
     assert not eng._inflight
 
 

@@ -163,3 +163,59 @@ def test_nai_macs_decrease_with_larger_ts():
                    params, g)
     assert hi.fp_macs < lo.fp_macs
     assert hi.total_macs < lo.total_macs
+
+
+def test_subgraph_edge_count_and_degrees_hand_oracle():
+    """PR 6 satellite: num_edges/degrees count ACTUAL self loops. On the
+    path 0-1-2-3 (plus one loop per node), inducing on {0, 1} keeps only
+    those two loops; the old one-loop-per-node assumption reported
+    m = (4 - 4) / 2 = 0 undirected edges and degree -1 for the dropped
+    nodes, poisoning the stationary denominator 2m + n."""
+    u = np.array([0, 1, 2], np.int32)
+    v = np.array([1, 2, 3], np.int32)
+    src, dst = add_self_loops(np.concatenate([u, v]),
+                              np.concatenate([v, u]), 4)
+    g = Graph(n=4, src=src, dst=dst,
+              features=np.eye(4, 4, dtype=np.float32),
+              labels=np.zeros(4, np.int32), num_classes=2,
+              train_idx=np.array([0], np.int32),
+              unlabeled_idx=np.array([1], np.int32),
+              test_idx=np.array([2, 3], np.int32))
+    assert g.num_self_loops == 4
+    assert g.num_edges == 3
+    np.testing.assert_array_equal(g.degrees, [1, 2, 2, 1])
+
+    sub = g.train_subgraph()               # induced on {0, 1}
+    assert sub.n == 4                      # ids are NOT remapped
+    assert sub.num_self_loops == 2         # only kept nodes keep theirs
+    assert sub.num_edges == 1              # the 0-1 edge
+    np.testing.assert_array_equal(sub.degrees, [1, 1, 0, 0])
+
+    a, b = stationary_weights(sub, r=0.5)  # denominator 2m + n = 6
+    dt = np.array([2.0, 2.0, 1.0, 1.0])
+    np.testing.assert_allclose(a, np.sqrt(dt) / 6.0, rtol=1e-6)
+    np.testing.assert_allclose(b, np.sqrt(dt), rtol=1e-6)
+
+
+def test_sampler_sub_edges_counts_actual_self_loops():
+    """Support sampling on a graph whose loops were partially dropped
+    must count the subgraph's real undirected edges, not assume one loop
+    per supporting node. Path 0-1-2-3 with loops ONLY on {0, 1}: the
+    2-hop support of batch [2] is all four nodes, whose induced subgraph
+    has 8 directed entries (3 undirected edges twice + 2 loops) — the
+    old one-loop-per-node formula reported (8 - 4) / 2 = 2."""
+    u = np.array([0, 1, 2, 0, 1], np.int32)    # last two: loops on 0, 1
+    v = np.array([1, 2, 3, 0, 1], np.int32)
+    g = Graph(n=4, src=np.concatenate([u, v[:3]]),
+              dst=np.concatenate([v, u[:3]]),
+              features=np.eye(4, 4, dtype=np.float32),
+              labels=np.zeros(4, np.int32), num_classes=2,
+              train_idx=np.array([0], np.int32),
+              unlabeled_idx=np.array([1], np.int32),
+              test_idx=np.array([2, 3], np.int32))
+    sup = sample_support(g, np.array([2], np.int64), hops=2, r=0.5)
+    assert set(sup.nodes.tolist()) == {0, 1, 2, 3}
+    loops = int((sup.src == sup.dst).sum())
+    assert loops == 2                          # only 0 and 1 kept theirs
+    assert len(sup.src) == 8
+    assert sup.sub_edges == 3
