@@ -36,10 +36,26 @@ Sharded rows also carry the halo-exchange structural columns:
   path silently degenerated to the dense exchange) or a frame larger
   than the dense frontier.
 
+``--graph-scale`` adds the store-scale sweep: synthetic power-law graphs
+(1e5 → 1e7 nodes full-size, one small size under ``--smoke``) are
+generated ON DISK in a subprocess (``python -m repro.gnn.store``) and
+served through a memory-mapped `MmapStore` — the features are never
+copied into RAM, only the pages each batch's support gathers touch. Each
+scale row records req/s, p50/95/99, the halo fraction (sharded rows),
+the host-stage share of batch time, the zero-steady-state counters, and
+the serving process's peak RSS next to the full feature-matrix bytes:
+``peak_rss_bytes < feature_bytes`` at the large sizes is the evidence
+the host stage's working set tracks the support, not the graph
+(``--check`` enforces it where the feature matrix is big enough to make
+the comparison meaningful, plus an MmapStore-vs-in-RAM bit-parity flag
+at the smallest size).
+
 Runnable standalone::
 
     PYTHONPATH=src python -m benchmarks.serving_bench [--smoke] [--check]
-                                                      [--sharded] [--out F]
+                                                      [--sharded]
+                                                      [--graph-scale]
+                                                      [--out F]
 
 writes ``BENCH_serving.json`` (``BENCH_serving_smoke.json`` with
 ``--smoke``) so the serving trajectory accumulates across commits.
@@ -70,6 +86,7 @@ from repro.gnn.nai import (NAIConfig, infer_batch_masked,
                            support_stationary_factors)
 from repro.gnn.packing import next_bucket, pack_support, step_active_blocks
 from repro.gnn.sampler import sample_support
+from repro.gnn.store import MmapStore, as_store
 from repro.kernels.spmm.kernel import RB
 from repro.serving import NAIServingEngine
 
@@ -202,15 +219,187 @@ def _sharded_specs(smoke: bool) -> List[Dict]:
     return specs
 
 
+def _graph_scale_specs(smoke: bool) -> List[Dict]:
+    """The store-scale sweep. Full-size features are 256-wide so the
+    feature matrix (n·f·4 bytes: 102 MB / 1.02 GB / 10.2 GB) dwarfs any
+    plausible process RSS at the two large sizes — that gap is what the
+    RSS gate measures. Smoke keeps one small cheap size (structure only;
+    a 25 MB feature matrix can't beat a jax-loaded process's baseline
+    RSS, so the gate doesn't apply there)."""
+    if smoke:
+        return [dict(n=100_000, feat_dim=64, avg_deg=8.0, n_batches=4)]
+    return [dict(n=100_000, feat_dim=256, avg_deg=16.0, n_batches=8),
+            dict(n=1_000_000, feat_dim=256, avg_deg=16.0, n_batches=8),
+            dict(n=10_000_000, feat_dim=256, avg_deg=16.0, n_batches=8)]
+
+
+def _reset_peak_rss() -> bool:
+    """Reset the kernel's VmHWM high-water mark to the current RSS (so
+    the per-row peak measures this row's serving, not process history).
+    Returns False where /proc/self/clear_refs is unwritable — the row
+    then reports the lifetime peak, still valid for the < feature_bytes
+    gate because the graph-scale section runs before everything else."""
+    try:
+        with open("/proc/self/clear_refs", "w") as fh:
+            fh.write("5")
+        return True
+    except OSError:
+        return False
+
+
+def _peak_rss_bytes() -> int:
+    try:
+        with open("/proc/self/status") as fh:
+            for line in fh:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    return -1
+
+
+def _serve_collect(engine, stream):
+    """Drain the stream, returning (predictions, exit orders) in
+    completion order — FIFO and deterministic, so two engines serving
+    the same stream are comparable element-wise."""
+    done = []
+    for nodes in stream:
+        engine.submit(nodes)
+        done += engine.step()
+    done += engine.flush()
+    return ([r.prediction for r in done], [r.exit_order for r in done])
+
+
+def _graph_scale(smoke: bool, store_dir: str = "") -> Dict:
+    """Generate power-law `MmapStore` graphs on disk (in a subprocess,
+    so generation never inflates the serving process's RSS) and serve
+    batches from each through the compiled engine. Runs FIRST in
+    `collect` — before any other section allocates — so even without a
+    VmHWM reset the recorded peak belongs to store-backed serving."""
+    import subprocess
+    import tempfile
+
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving.engine import EngineStats, LatencyRing
+
+    devices = min(2, len(jax.devices()))
+    rounds = 2
+    seed = 7
+    specs = _graph_scale_specs(smoke)
+    section: Dict = {
+        "impl": "segment", "pipeline_depth": 2, "devices": devices,
+        "seed": seed, "expected_sizes": [sp["n"] for sp in specs],
+        "store_parity": None, "rows": []}
+    tmp = None
+    if not store_dir:
+        tmp = tempfile.TemporaryDirectory(prefix="graphstore-")
+        store_dir = tmp.name
+    try:
+        for si, sp in enumerate(specs):
+            path = os.path.join(store_dir, f"n{sp['n']}")
+            env = dict(os.environ)
+            src = os.path.join(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))), "src")
+            env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+            t0 = time.perf_counter()
+            if not os.path.exists(os.path.join(path, "meta.json")):
+                subprocess.run(
+                    [sys.executable, "-c",
+                     "from repro.gnn.store import _main; _main()",
+                     "--n", str(sp["n"]), "--avg-deg", str(sp["avg_deg"]),
+                     "--seed", str(seed),
+                     "--feat-dim", str(sp["feat_dim"]), "--out", path],
+                    check=True, env=env)
+            gen_s = time.perf_counter() - t0
+            store = MmapStore(path)
+            cfg = GNNConfig("sgc", sp["feat_dim"], store.num_classes,
+                            k=2, hidden=32, mlp_layers=2)
+            params = {"cls": init_classifiers(cfg, jax.random.PRNGKey(0))}
+            nai = NAIConfig(t_s=6.0, t_min=1, t_max=2,
+                            batch_size=32 if smoke else 64)
+            rng = np.random.default_rng(seed)
+            # uniform ids WITHOUT Generator.choice(replace=False): that
+            # permutes the whole population (an O(n) allocation at 1e7
+            # nodes). Collision odds at 64-of-1e7 are negligible and the
+            # engine dedupes per batch anyway.
+            stream = [np.unique(rng.integers(0, sp["n"],
+                                             size=nai.batch_size))
+                      for _ in range(sp["n_batches"])]
+            kw = dict(max_wait_s=10.0, mode="compiled",
+                      spmm_impl="segment", pipeline_depth=2)
+            if devices > 1:
+                kw.update(mesh=make_serving_mesh(devices),
+                          gather_mode="halo")
+            eng = NAIServingEngine(cfg, nai, params, store, **kw)
+            _drain(eng, stream)           # warm 1: compiles, HWM growth
+            _drain(eng, stream)           # warm 2: pack pool converges
+            c0, a0 = eng.jit_stats["compiles"], eng.pack_stats["allocs"]
+            # release warmup's resident feature pages so the post-reset
+            # high-water mark measures the TIMED rounds' working set
+            store.drop_resident()
+            rss_reset = _reset_peak_rss()
+            best = dict(wall=float("inf"))
+            for _ in range(rounds):
+                eng.stats = EngineStats(latencies=LatencyRing(16384))
+                eng.batch_timings.clear()
+                wall = _drain(eng, stream)
+                if wall < best["wall"]:
+                    best = dict(wall=wall, served=eng.stats.served,
+                                summary=eng.stats.summary(),
+                                timings=list(eng.batch_timings))
+            tm = best["timings"]
+            host = float(np.mean([t["host_s"] for t in tm]))
+            disp = float(np.mean([t["dispatch_s"] for t in tm]))
+            sync = float(np.mean([t["sync_s"] for t in tm]))
+            row = {
+                "n": sp["n"], "feat_dim": sp["feat_dim"],
+                "avg_deg": sp["avg_deg"],
+                "num_edges": store.num_edges,
+                "gen_s": round(gen_s, 2),
+                "feature_bytes": int(sp["n"]) * sp["feat_dim"] * 4,
+                "peak_rss_bytes": _peak_rss_bytes(),
+                "rss_reset": rss_reset,
+                "req_per_s": round(best["served"] / best["wall"], 1),
+                "p50_ms": round(best["summary"]["p50_ms"], 3),
+                "p95_ms": round(best["summary"]["p95_ms"], 3),
+                "p99_ms": round(best["summary"]["p99_ms"], 3),
+                "host_stage_ms": round(1e3 * host, 3),
+                "dispatch_ms": round(1e3 * disp, 3),
+                "device_sync_ms": round(1e3 * sync, 3),
+                "host_share": round(host / max(host + disp + sync, 1e-12),
+                                    3),
+                "steady_compiles": eng.jit_stats["compiles"] - c0,
+                "steady_pack_allocs": eng.pack_stats["allocs"] - a0,
+            }
+            if devices > 1:
+                row["gather_mode"] = eng.gather_mode
+                row["halo_frac"] = round(eng.halo_stats["halo_frac"], 3)
+            section["rows"].append(row)
+            if si == 0:
+                # bit-parity gate at the cheapest size: the mmap-backed
+                # engine vs one serving the SAME files eagerly loaded
+                # into RAM — predictions AND exit orders must match
+                ram = NAIServingEngine(
+                    cfg, nai, params, MmapStore(path, mmap=False), **kw)
+                p_m, o_m = _serve_collect(eng, stream)
+                p_r, o_r = _serve_collect(ram, stream)
+                section["store_parity"] = bool(p_m == p_r and o_m == o_r)
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+    return section
+
+
 def _series_structural(g, cfg, nai, stream) -> Dict:
     """Measure — not assume — the series-carry shape on the default
     serving shape: pack one stream batch and run the masked NAP core
     directly; the carry's row count is what the jitted loop writes to
     HBM per step (valid under interpret mode: shapes are shapes)."""
     nodes = stream[0]
-    sup = sample_support(g, nodes, nai.t_max, cfg.r)
-    x0 = g.features[sup.nodes].astype(np.float32)
-    c, s = support_stationary_factors(g, sup, x0, cfg.r)
+    store = as_store(g)
+    sup = sample_support(store, nodes, nai.t_max, cfg.r)
+    x0 = store.gather_features(sup.nodes).astype(np.float32)
+    c, s = support_stationary_factors(store, sup, x0, cfg.r)
     x_inf = (c[:, None] * s[None, :]).astype(np.float32)
     packed = pack_support(sup, x0, x_inf,
                           nb_bucket=next_bucket(sup.n_batch, RB))
@@ -231,7 +420,11 @@ def _series_structural(g, cfg, nai, stream) -> Dict:
     }
 
 
-def collect(smoke: bool = False, sharded: bool = False) -> Dict:
+def collect(smoke: bool = False, sharded: bool = False,
+            graph_scale: bool = False, store_dir: str = "") -> Dict:
+    # graph-scale first: its RSS gate wants a process that has not yet
+    # allocated every other section's engines and operands
+    gs = _graph_scale(smoke, store_dir) if graph_scale else None
     g, cfg, params, nai = _setup(smoke)
     n_batches = 4 if smoke else 8
     rounds = 2 if smoke else 3
@@ -282,6 +475,8 @@ def collect(smoke: bool = False, sharded: bool = False) -> Dict:
     if sharded:
         payload["sharded"] = _bench_configs(
             g, cfg, params, nai, _sharded_specs(smoke), stream, rounds)
+    if gs is not None:
+        payload["graph_scale"] = gs
     return payload
 
 
@@ -323,6 +518,35 @@ def check(payload: Dict) -> List[str]:
                             f"exceed the gathered frame "
                             f"{c['gather_rows_per_step']} (metadata "
                             f"bound violated)")
+    gs = payload.get("graph_scale")
+    if gs is not None:
+        have = {r["n"] for r in gs["rows"]}
+        for n_ in gs["expected_sizes"]:
+            if n_ not in have:
+                errs.append(f"graph_scale: missing scale row n={n_}")
+        if gs.get("store_parity") is False:
+            errs.append("graph_scale: MmapStore serving diverged from "
+                        "the in-RAM store (predictions/exit orders)")
+        for r in gs["rows"]:
+            tag = f"graph_scale/n{r['n']}"
+            if r["steady_compiles"] > 0:
+                errs.append(f"{tag}: {r['steady_compiles']} jit compiles "
+                            f"in steady state (bucketing defeated)")
+            if r["steady_pack_allocs"] > 0:
+                errs.append(f"{tag}: {r['steady_pack_allocs']} "
+                            f"bucket-sized pack allocations in steady "
+                            f"state")
+            # the streaming claim: serving a graph whose feature matrix
+            # dwarfs any plausible process footprint must NOT page it
+            # all in. Only meaningful where the matrix actually dwarfs
+            # the baseline (jax + engines is a few hundred MB on its
+            # own), so the gate starts at 800 MB of features.
+            if (r["feature_bytes"] >= 8e8 and r["peak_rss_bytes"] > 0
+                    and r["peak_rss_bytes"] >= r["feature_bytes"]):
+                errs.append(
+                    f"{tag}: peak RSS {r['peak_rss_bytes']} >= feature "
+                    f"bytes {r['feature_bytes']} (the store was "
+                    f"materialized in RAM — streaming regressed)")
     return errs
 
 
@@ -348,6 +572,26 @@ def _sharded_csv(sharded: List[Dict]) -> List[str]:
     return rows
 
 
+def _graph_scale_csv(gs: Dict) -> List[str]:
+    rows = []
+    if not gs:
+        return rows
+    for r in gs.get("rows", []):
+        us = 1e6 / max(r["req_per_s"], 1e-9)
+        derived = (
+            f"req_per_s={r['req_per_s']};p50_ms={r['p50_ms']};"
+            f"p95_ms={r['p95_ms']};p99_ms={r['p99_ms']};"
+            f"host_share={r['host_share']};"
+            f"feature_bytes={r['feature_bytes']};"
+            f"peak_rss_bytes={r['peak_rss_bytes']};"
+            f"steady_compiles={r['steady_compiles']};"
+            f"steady_pack_allocs={r['steady_pack_allocs']}")
+        if "halo_frac" in r:
+            derived += f";halo_frac={r['halo_frac']}"
+        rows.append(csv_row(f"serving/graph_scale/n{r['n']}", us, derived))
+    return rows
+
+
 def _rows(payload: Dict) -> List[str]:
     rows = []
     for c in payload["configs"]:
@@ -364,6 +608,7 @@ def _rows(payload: Dict) -> List[str]:
                         f"device_sync_ms={c['device_sync_ms']}")
         rows.append(csv_row(name, us, derived))
     rows += _sharded_csv(payload.get("sharded", []))
+    rows += _graph_scale_csv(payload.get("graph_scale", {}))
     st = payload["structural"]
     rows.append(csv_row(
         "serving/structural/series_carry", 0.0,
@@ -402,16 +647,37 @@ def main() -> None:
                     help="add mesh-sharded serving rows (device counts "
                          "clipped to what the backend exposes; force "
                          "host devices via XLA_FLAGS for the full sweep)")
+    ap.add_argument("--graph-scale", action="store_true",
+                    help="add the MmapStore graph-size sweep (graphs "
+                         "generated on disk in a subprocess; 1e5-1e7 "
+                         "nodes full-size, one small size with --smoke)")
+    ap.add_argument("--store-dir", default="",
+                    help="directory for --graph-scale store dirs "
+                         "(default: a tempdir, deleted afterwards; "
+                         "point at a persistent dir to reuse generated "
+                         "graphs across runs)")
     ap.add_argument("--out", default="",
                     help="JSON output path (default BENCH_serving.json, "
                          "or BENCH_serving_smoke.json with --smoke)")
     args = ap.parse_args()
     out_path = args.out or ("BENCH_serving_smoke.json" if args.smoke
                             else "BENCH_serving.json")
-    payload = collect(smoke=args.smoke, sharded=args.sharded)
+    payload = collect(smoke=args.smoke, sharded=args.sharded,
+                      graph_scale=args.graph_scale,
+                      store_dir=args.store_dir)
     print("name,us_per_call,derived")
     for r in _rows(payload):
         print(r, flush=True)
+    # frontend_bench merges its section into this file; carry it across
+    # rewrites so regenerating the serving record never drops it
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as fh:
+                prev = json.load(fh)
+            if "frontend" in prev:
+                payload["frontend"] = prev["frontend"]
+        except (json.JSONDecodeError, OSError):
+            pass
     with open(out_path, "w") as fh:
         json.dump(payload, fh, indent=2)
         fh.write("\n")

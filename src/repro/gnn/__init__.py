@@ -9,8 +9,9 @@ from repro.gnn.nai import (NAIConfig, NAIResult, accuracy, infer_all,
 from repro.gnn.packing import (PackedSupport, batch_bucket, next_bucket,
                                pack_support, shard_batch_perm,
                                shard_row_perm, step_active_blocks)
-from repro.gnn.sampler import (Support, sample_support,
-                               sample_support_legacy)
+from repro.gnn.sampler import Support, sample_support
+from repro.gnn.store import (GraphStore, InMemoryStore, MmapStore,
+                             as_store, make_graph, save_graph_store)
 
 __all__ = [
     "Graph", "propagated_series", "stationary_weights", "BACKENDS",
@@ -22,5 +23,6 @@ __all__ = [
     "order_distribution", "PackedSupport", "batch_bucket", "next_bucket",
     "pack_support", "shard_batch_perm", "shard_row_perm",
     "step_active_blocks", "Support", "sample_support",
-    "sample_support_legacy",
+    "GraphStore", "InMemoryStore", "MmapStore", "as_store",
+    "make_graph", "save_graph_store",
 ]

@@ -7,6 +7,13 @@ node features are noisy class prototypes, so feature propagation over the
 homophilous graph genuinely improves classification — the same mechanism the
 paper's technique exploits (nodes deep inside a block smooth quickly -> exit
 early; boundary/high-degree nodes need more hops).
+
+Reproducibility contract (shared with `repro.gnn.store.make_graph`): every
+generator takes an EXPLICIT seed — no module-level RNG, no default — and
+routes all randomness through the one `np.random.Generator` seeded from
+it, so the same (name, scale, seed) triple yields the same graph in every
+process. Bench and test graphs are reproducible across machines because
+of this; do not add `np.random.*` module calls here.
 """
 from __future__ import annotations
 
@@ -26,9 +33,12 @@ PRESETS: Dict[str, tuple] = {
 }
 
 
-def make_sbm(name: str, *, scale: float = 1.0, seed: int = 0,
+def make_sbm(name: str, *, scale: float = 1.0, seed: int,
              homophily: float = 0.9, power_law: float = 1.6,
              feature_noise: float = 1.8) -> Graph:
+    if seed is None:
+        raise ValueError("make_sbm requires an explicit integer seed "
+                         "(graphs must be reproducible across processes)")
     n_full, avg_deg, f, c = PRESETS[name]
     n = max(int(n_full * scale), 50 * c)
     rng = np.random.default_rng(seed)
@@ -95,10 +105,14 @@ def make_sbm(name: str, *, scale: float = 1.0, seed: int = 0,
                  test_idx=test_idx.astype(np.int32), name=name)
 
 
-def load_dataset(name: str, scale: float = 1.0, seed: int = 0,
+def load_dataset(name: str, scale: float = 1.0, seed: int = None,
                  hard: bool = False) -> Graph:
     """`hard=True`: noisier features + weaker homophily — used by the
-    sensitivity benchmark (fig3) where the default generator saturates."""
+    sensitivity benchmark (fig3) where the default generator saturates.
+    `seed` is required (explicit-seed contract, module docstring)."""
+    if seed is None:
+        raise ValueError("load_dataset requires an explicit integer seed "
+                         "(graphs must be reproducible across processes)")
     if hard:
         return make_sbm(name, scale=scale, seed=seed, homophily=0.65,
                         feature_noise=6.0)

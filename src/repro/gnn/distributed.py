@@ -32,25 +32,31 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.gnn.backends import get_backend, pack_operands, run_propagation
-from repro.gnn.graph import Graph, edge_coefficients
 from repro.gnn.packing import (pack_support, shard_batch_perm,
                                step_active_blocks)
 from repro.gnn.sampler import Support
+from repro.gnn.store import as_store
 
 
-def graph_as_support(g: Graph, r: float = 0.5) -> Support:
+def graph_as_support(g, r: float = 0.5) -> Support:
     """The whole graph viewed as its own support: every node is a batch
     node at hop 0 and the induced subgraph is the graph itself. Feeding
     this through `pack_support(n_shards=D)` turns full-graph propagation
-    into the serving engine's sharded operand problem."""
-    n = g.n
+    into the serving engine's sharded operand problem. `g` is a
+    `GraphStore` (or a raw `Graph`, wrapped): the edge list and
+    coefficients come from the store's CSR views in CSR (dst-major)
+    order, with degrees from the store-build metadata."""
+    store = as_store(g)
+    n = store.n
+    src, dst = store.coo()
     return Support(nodes=np.arange(n, dtype=np.int64),
                    hop=np.zeros(n, np.int32), n_batch=n,
-                   src=g.src.astype(np.int32), dst=g.dst.astype(np.int32),
-                   coef=edge_coefficients(g, r), sub_edges=g.num_edges)
+                   src=src, dst=dst,
+                   coef=store.edge_coefficients(r),
+                   sub_edges=store.num_edges)
 
 
-def pack_graph(g: Graph, n_shards: int, r: float = 0.5,
+def pack_graph(g, n_shards: int, r: float = 0.5,
                spmm_impl: str = "segment", *, nb_bucket=None,
                s_bucket=None, tb_bucket=None, halo: bool = False):
     """(backend, PackedSupport) for full-graph propagation. Exits are
@@ -62,8 +68,9 @@ def pack_graph(g: Graph, n_shards: int, r: float = 0.5,
     partitions of a well-mixed graph reference most blocks, so expect a
     halo fraction near 1 — batch serving is where the halo pays)."""
     be = get_backend(spmm_impl)
-    sup = graph_as_support(g, r)
-    x0 = g.features.astype(np.float32)
+    store = as_store(g)
+    sup = graph_as_support(store, r)
+    x0 = np.asarray(store.features, np.float32)
     f = x0.shape[1]
     factors = ((np.zeros(sup.n_batch, np.float32),
                 np.zeros(f, np.float32)) if be.uses_factors else None)
@@ -78,7 +85,7 @@ def pack_graph(g: Graph, n_shards: int, r: float = 0.5,
     return be, packed
 
 
-def distributed_series(mesh, g: Graph, k: int, r: float = 0.5,
+def distributed_series(mesh, g, k: int, r: float = 0.5,
                        spmm_impl: str = "segment", *,
                        interpret: bool = True, nb_bucket=None,
                        s_bucket=None, tb_bucket=None,
@@ -87,6 +94,7 @@ def distributed_series(mesh, g: Graph, k: int, r: float = 0.5,
     against `repro.gnn.graph.propagated_series`. The mesh's ``data`` axis
     size is the shard count (1 = single-device path). `gather_mode`
     selects the per-step frontier exchange (`repro.gnn.backends`)."""
+    g = as_store(g)
     D = int(mesh.shape["data"]) if "data" in mesh.axis_names else 1
     halo = gather_mode != "dense" and D > 1
     be, packed = pack_graph(g, D, r, spmm_impl, nb_bucket=nb_bucket,
@@ -110,7 +118,7 @@ def distributed_series(mesh, g: Graph, k: int, r: float = 0.5,
                                 else "dense")
     if D > 1:
         series = series[:, shard_batch_perm(packed.n_batch, D), :]
-    f = g.features.shape[1]
+    f = g.feat_dim
     return [series[ell, :g.n, :f] for ell in range(k + 1)]
 
 

@@ -30,6 +30,7 @@ from repro.gnn.models import (GNNConfig, apply_classifier,
                               classification_macs)
 from repro.gnn.packing import shard_batch_perm
 from repro.gnn.sampler import Support, sample_support
+from repro.gnn.store import as_store
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,20 +85,23 @@ def _subgraph_spmm(sup: Support, x: np.ndarray, active_nodes: np.ndarray
     return out, int(emask.sum())
 
 
-def support_stationary_factors(g: Graph, sup: Support, x0: np.ndarray,
+def support_stationary_factors(g, sup: Support, x0: np.ndarray,
                                r: float) -> Tuple[np.ndarray, np.ndarray]:
     """The stationary state Â^∞ X at the batch rows (Eq. 7) is rank-1 by
     construction; return its factors (c (n_batch,), s (f,)) in float64 so
     x_inf = c ⊗ s. The fused step kernel consumes the factors directly
-    (it never materializes the dense x_inf)."""
-    dt = (g.degrees[sup.nodes] + 1).astype(np.float64)
+    (it never materializes the dense x_inf). `g` is a `GraphStore` (or a
+    raw `Graph`, wrapped) — degrees come from the store-build metadata,
+    gathered at the support rows only."""
+    store = as_store(g)
+    dt = (np.asarray(store.degrees[sup.nodes]) + 1).astype(np.float64)
     denom = 2.0 * sup.sub_edges + len(sup)
     s = ((dt ** (1.0 - r))[:, None] * x0).sum(axis=0)
     c = (dt[:sup.n_batch] ** r) / denom
     return c, s
 
 
-def support_stationary_state(g: Graph, sup: Support, x0: np.ndarray,
+def support_stationary_state(g, sup: Support, x0: np.ndarray,
                              r: float) -> np.ndarray:
     """Rank-1 stationary state Â^∞ X at the batch rows (Eq. 7) over the
     sampled subgraph, float64. Shared by the host and compiled serving
@@ -131,15 +135,16 @@ def _needed_mask(sup: Support, active_batch: np.ndarray, remaining_hops: int
     return dist <= remaining_hops
 
 
-def infer_batch_host(cfg: GNNConfig, nai: NAIConfig, params, g: Graph,
+def infer_batch_host(cfg: GNNConfig, nai: NAIConfig, params, g,
                      batch_nodes: np.ndarray):
-    """Algorithm 1 for one batch.
+    """Algorithm 1 for one batch over a `GraphStore` (or raw `Graph`).
     Returns (preds, orders, macs, fp_time_s, wall_s)."""
-    f = g.features.shape[1]
+    store = as_store(g)
+    f = store.feat_dim
     t0 = time.perf_counter()
-    sup = sample_support(g, batch_nodes, nai.t_max, cfg.r)
+    sup = sample_support(store, batch_nodes, nai.t_max, cfg.r)
     nb = sup.n_batch
-    x = g.features[sup.nodes].astype(np.float32)
+    x = store.gather_features(sup.nodes).astype(np.float32)
     macs = {"stationary": 0.0, "propagation": 0.0, "distance": 0.0,
             "classification": 0.0}
 

@@ -4,15 +4,23 @@ BFS from the batch nodes over the in-neighbor CSR up to `hops`, returning
 the supporting set partitioned into hop layers plus the induced subgraph
 (local ids, per-edge coefficients using GLOBAL degrees, per the paper).
 
-Two implementations with identical output (node order, hop layers, induced
-edge order, coefficients):
+The sampler is STORE-FIRST: it walks the `row_ptr` / `col_idx` /
+`degrees` views of a `repro.gnn.store.GraphStore`, so the same code
+serves an in-RAM `InMemoryStore` and a disk-backed `MmapStore` — the
+only storage it ever materializes is the support itself. Passing a raw
+`Graph` positionally still works through a deprecation shim
+(`as_store(warn=True)` wraps it in a memoized `InMemoryStore`).
 
-* `sample_support` — vectorized CSR frontier expansion: one
-  `repeat`/`unique` pass per hop, no Python dicts or per-node loops. This
-  is the serving-path sampler; on CPU it is the difference between the
-  sampler dominating batch latency and it being noise.
-* `sample_support_legacy` — the original per-node dict BFS, kept as the
-  readable reference for parity testing.
+Per-batch cost is O(support), not O(n): the visited-set and local-id
+maps are epoch-stamped scratch arrays cached on the store — no O(n)
+allocation or memset per call, which at 1e7-node store scale is the
+difference between the host stage tracking the support size and it
+being dominated by clearing bookkeeping arrays.
+
+`_sample_support_legacy` — the original per-node dict BFS — is NOT part
+of the public API (dropped from `repro.gnn` in the store redesign); it
+survives here only as the readable oracle the parity tests diff the
+vectorized sampler against.
 
 Batch ids must be duplicate-free (the serving engine dedupes per batch);
 duplicates make the local-id map ambiguous in both implementations.
@@ -24,7 +32,7 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.gnn.graph import Graph
+from repro.gnn.store import GraphStore, as_store
 
 
 @dataclasses.dataclass
@@ -40,19 +48,43 @@ class Support:
         return len(self.nodes)
 
 
-def _flat_neighbors(indptr: np.ndarray, nbr: np.ndarray, nodes: np.ndarray
-                    ) -> Tuple[np.ndarray, np.ndarray]:
+class _SamplerScratch:
+    """Epoch-stamped visited/local-id maps, cached per store.
+
+    `seen_stamp[v] == epoch` means v was discovered during the current
+    call; bumping `epoch` invalidates everything in O(1) instead of an
+    O(n) memset. Stamps are int64 — no wraparound within any realistic
+    process lifetime."""
+
+    def __init__(self, n: int):
+        self.seen_stamp = np.zeros(n, np.int64)
+        self.local_stamp = np.zeros(n, np.int64)
+        self.local_id = np.zeros(n, np.int64)
+        self.epoch = 0
+
+
+def _scratch(store: GraphStore) -> _SamplerScratch:
+    s = store.__dict__.get("_sampler_scratch")
+    if s is None or len(s.seen_stamp) != store.n:
+        s = _SamplerScratch(store.n)
+        store.__dict__["_sampler_scratch"] = s
+    return s
+
+
+def _flat_neighbors(row_ptr: np.ndarray, col_idx: np.ndarray,
+                    nodes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Concatenated CSR neighbor lists of `nodes`, in `nodes` order.
-    Returns (neighbors, counts)."""
-    starts = indptr[nodes]
-    counts = indptr[nodes + 1] - starts
+    Returns (neighbors, counts). On a memmapped CSR this gathers only
+    the touched rows."""
+    starts = np.asarray(row_ptr[nodes], np.int64)
+    counts = np.asarray(row_ptr[nodes + 1], np.int64) - starts
     total = int(counts.sum())
     if total == 0:
-        return np.empty(0, nbr.dtype), counts
+        return np.empty(0, col_idx.dtype), counts
     offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
     idx = np.arange(total, dtype=np.int64) + np.repeat(starts - offsets,
                                                        counts)
-    return nbr[idx], counts
+    return np.asarray(col_idx[idx]), counts
 
 
 def _first_occurrence(a: np.ndarray) -> np.ndarray:
@@ -61,23 +93,28 @@ def _first_occurrence(a: np.ndarray) -> np.ndarray:
     return a[np.sort(first)]
 
 
-def sample_support(g: Graph, batch: np.ndarray, hops: int, r: float
+def sample_support(store, batch: np.ndarray, hops: int, r: float
                    ) -> Support:
-    """Vectorized frontier expansion (numpy repeat/unique, no dicts)."""
-    indptr, nbr = g.csr()
+    """Vectorized frontier expansion (numpy repeat/unique, no dicts)
+    over a `GraphStore`'s CSR views. `store` may also be a raw `Graph`
+    (deprecated — wrapped via `as_store`)."""
+    store = as_store(store, warn=True)
+    row_ptr, col_idx = store.csr()
+    scratch = _scratch(store)
+    scratch.epoch += 1
+    epoch, seen = scratch.epoch, scratch.seen_stamp
     batch = np.asarray(batch, np.int64)
-    seen = np.zeros(g.n, bool)
-    seen[batch] = True
+    seen[batch] = epoch
     node_parts: List[np.ndarray] = [batch]
     hop_parts: List[np.ndarray] = [np.zeros(len(batch), np.int32)]
     frontier = batch
     for h in range(1, hops + 1):
         if len(frontier) == 0:
             break
-        neigh, _ = _flat_neighbors(indptr, nbr, frontier)
-        cand = neigh[~seen[neigh]].astype(np.int64)
+        neigh, _ = _flat_neighbors(row_ptr, col_idx, frontier)
+        cand = neigh[seen[neigh] != epoch].astype(np.int64)
         new = _first_occurrence(cand)
-        seen[new] = True
+        seen[new] = epoch
         node_parts.append(new)
         hop_parts.append(np.full(len(new), h, np.int32))
         frontier = new
@@ -85,16 +122,16 @@ def sample_support(g: Graph, batch: np.ndarray, hops: int, r: float
     hop = np.concatenate(hop_parts)
 
     # induced edges (j -> i), ordered by destination's local id then CSR
-    local = np.full(g.n, -1, np.int64)
-    local[nodes] = np.arange(len(nodes))
-    neigh, counts = _flat_neighbors(indptr, nbr, nodes)
+    lstamp, lid = scratch.local_stamp, scratch.local_id
+    lstamp[nodes] = epoch
+    lid[nodes] = np.arange(len(nodes))
+    neigh, counts = _flat_neighbors(row_ptr, col_idx, nodes)
     dst_all = np.repeat(np.arange(len(nodes), dtype=np.int64), counts)
-    src_all = local[neigh]
-    keep = src_all >= 0
-    src = src_all[keep].astype(np.int32)
+    keep = lstamp[neigh] == epoch
+    src = lid[neigh[keep]].astype(np.int32)
     dst = dst_all[keep].astype(np.int32)
 
-    coef = _edge_coefs(g, nodes, src, dst, r)
+    coef = _edge_coefs(store, nodes, src, dst, r)
     # count actual self loops (not one-per-node: graphs whose loops were
     # dropped, e.g. a train subgraph, would undercount otherwise)
     sub_edges = (len(src) - int((src == dst).sum())) // 2
@@ -102,18 +139,20 @@ def sample_support(g: Graph, batch: np.ndarray, hops: int, r: float
                    dst=dst, coef=coef, sub_edges=max(sub_edges, 0))
 
 
-def _edge_coefs(g: Graph, nodes: np.ndarray, src: np.ndarray,
+def _edge_coefs(store: GraphStore, nodes: np.ndarray, src: np.ndarray,
                 dst: np.ndarray, r: float) -> np.ndarray:
-    dt = (g.degrees + 1).astype(np.float64)    # GLOBAL degrees (known)
-    gsrc = nodes[src]
-    gdst = nodes[dst]
-    return (dt[gdst] ** (r - 1.0) * dt[gsrc] ** (-r)).astype(np.float32)
+    # GLOBAL degrees (known at store build), gathered at support rows
+    dt = (np.asarray(store.degrees[nodes]) + 1).astype(np.float64)
+    return (dt[dst] ** (r - 1.0) * dt[src] ** (-r)).astype(np.float32)
 
 
-def sample_support_legacy(g: Graph, batch: np.ndarray, hops: int, r: float
-                          ) -> Support:
-    """Reference per-node dict BFS (original implementation)."""
-    indptr, nbr = g.csr()
+def _sample_support_legacy(store, batch: np.ndarray, hops: int, r: float
+                           ) -> Support:
+    """Reference per-node dict BFS (original implementation). Test-only
+    oracle — deliberately simple, quadratically slower, and absent from
+    the public `repro.gnn` surface."""
+    store = as_store(store)
+    row_ptr, col_idx = store.csr()
     seen = {}
     order: List[int] = []
     hop_of: List[int] = []
@@ -125,7 +164,7 @@ def sample_support_legacy(g: Graph, batch: np.ndarray, hops: int, r: float
     for h in range(1, hops + 1):
         nxt = []
         for u in frontier:
-            for v in nbr[indptr[u]:indptr[u + 1]]:
+            for v in col_idx[row_ptr[u]:row_ptr[u + 1]]:
                 v = int(v)
                 if v not in seen:
                     seen[v] = h
@@ -139,7 +178,7 @@ def sample_support_legacy(g: Graph, batch: np.ndarray, hops: int, r: float
     # induced edges (j -> i) for i in support whose source j is in support
     srcs, dsts = [], []
     for u in order:
-        for v in nbr[indptr[u]:indptr[u + 1]]:
+        for v in col_idx[row_ptr[u]:row_ptr[u + 1]]:
             v = int(v)
             if v in local:
                 dsts.append(local[u])
@@ -147,8 +186,13 @@ def sample_support_legacy(g: Graph, batch: np.ndarray, hops: int, r: float
     src = np.asarray(srcs, np.int32)
     dst = np.asarray(dsts, np.int32)
 
-    coef = _edge_coefs(g, nodes, src, dst, r)
+    coef = _edge_coefs(store, nodes, src, dst, r)
     sub_edges = (len(src) - int((src == dst).sum())) // 2
     return Support(nodes=nodes, hop=np.asarray(hop_of, np.int32),
                    n_batch=len(batch), src=src, dst=dst, coef=coef,
                    sub_edges=max(sub_edges, 0))
+
+
+# retired alias: import site for pre-store callers; the underscore name
+# is the one the parity tests use
+sample_support_legacy = _sample_support_legacy

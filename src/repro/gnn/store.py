@@ -1,0 +1,557 @@
+"""GraphStore — streaming graph storage behind the sampler.
+
+Everything upstream of this module (sampler, packer, serving engine)
+used to assume the whole graph lives in one in-memory numpy CSR owned by
+a `Graph`. That assumption caps the servable graph at host RAM and is
+exactly what the paper's headline setting (ogbn-products, ~2.4M nodes,
+124M edges) breaks. The fix is the InferTurbo/DGI premise: the compute
+engine consumes graph storage through a NARROW VIEW INTERFACE it does
+not own, so the storage layer is free to be an in-RAM array today and a
+memory-mapped file (or a remote shard) tomorrow without the engine
+noticing.
+
+The interface (`GraphStore`) is three zero-copy array views plus
+build-time metadata:
+
+* ``row_ptr`` (n+1,) int64 / ``col_idx`` (E,) int32 — the in-neighbor
+  CSR the frontier sampler walks (row i lists the sources j of edges
+  j -> i; each node's self loop is stored in its row);
+* ``features`` (n, f) float32 — node features, gathered row-wise
+  (`gather_features`) so only the rows a batch's support touches are
+  ever materialized;
+* ``degrees`` (n,) int64 and the ``num_edges`` / ``num_self_loops``
+  scalars — the self-loop/degree accounting fixed in PR 6, computed
+  ONCE when the store is built and persisted as metadata instead of
+  being recounted O(E) on every batch.
+
+Two implementations:
+
+* `InMemoryStore` — wraps today's `Graph` bit-identically (same CSR
+  arrays, same features); the degree metadata is cached at
+  construction.
+* `MmapStore` — a directory of ``.npy`` files: the CSR views open
+  lazily with ``np.load(mmap_mode="r")`` and are NEVER copied wholesale
+  into RAM, while feature row gathers bypass the mapping entirely
+  (``preadv`` into the output array — the page cache absorbs locality
+  and is not charged to the process), so host residency scales with the
+  working set (supports actually sampled), not the graph.
+
+`make_graph(n, avg_deg, alpha, seed)` generates a synthetic power-law
+graph at 1e5–1e7-node scale straight to disk (fixed-size chunks, one
+`np.random.Generator`, deterministic under seed) so CI and the
+``serving_bench --graph-scale`` sweep exercise the shape without a
+dataset download. The module is runnable —
+
+    python -m repro.gnn.store --n 1000000 --avg-deg 16 --out /tmp/g1m
+
+— which is how the benchmark generates graphs in a SUBPROCESS, keeping
+the serving process's peak RSS an honest measure of what serving (not
+generation) touches.
+
+On-disk layout (format ``repro-graphstore-v1``)::
+
+    store_dir/
+      meta.json       n, feat_dim, num_classes, num_edges,
+                      num_self_loops, name, generator params
+      row_ptr.npy     (n+1,) int64   CSR row pointers
+      col_idx.npy     (E,)   int32   in-neighbor ids (self loop in-row)
+      features.npy    (n, f) float32
+      degrees.npy     (n,)   int64   degree WITHOUT self loop
+      labels.npy      (n,)   int32   optional
+"""
+from __future__ import annotations
+
+import json
+import mmap as _mmap
+import os
+import warnings
+from typing import Optional, Tuple
+
+import numpy as np
+
+# madvise is Linux/py3.8+; elsewhere MmapStore still works, just without
+# the bounded-residency guarantees (RSS then includes readahead pages).
+_HAVE_MADVISE = hasattr(_mmap, "MADV_RANDOM") and hasattr(_mmap,
+                                                          "MADV_DONTNEED")
+
+from repro.gnn.graph import Graph
+
+FORMAT = "repro-graphstore-v1"
+
+_ARRAYS = ("row_ptr", "col_idx", "features", "degrees", "labels")
+
+
+class GraphStore:
+    """The narrow storage interface the sampler/packer/engine consume.
+
+    Subclasses provide ``row_ptr`` / ``col_idx`` / ``features`` /
+    ``degrees`` properties returning array views (ndarray or np.memmap)
+    plus the build-time scalars. Nothing here may copy an O(n) or O(E)
+    array: views in, row gathers out.
+    """
+
+    name: str = "store"
+    n: int = 0
+    feat_dim: int = 0
+    num_classes: int = 0
+    num_edges: int = 0        # undirected count m (paper's 2m+n uses it)
+    num_self_loops: int = 0
+
+    # -- array views (subclass responsibility)
+    @property
+    def row_ptr(self) -> np.ndarray:
+        raise NotImplementedError
+
+    @property
+    def col_idx(self) -> np.ndarray:
+        raise NotImplementedError
+
+    @property
+    def features(self) -> np.ndarray:
+        raise NotImplementedError
+
+    @property
+    def degrees(self) -> np.ndarray:
+        raise NotImplementedError
+
+    @property
+    def labels(self) -> Optional[np.ndarray]:
+        return None
+
+    # -- derived API shared by all implementations
+    def csr(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(row_ptr, col_idx) — the view pair the frontier sampler walks."""
+        return self.row_ptr, self.col_idx
+
+    def gather_features(self, nodes: np.ndarray) -> np.ndarray:
+        """Features at `nodes`, materialized as a fresh (len(nodes), f)
+        ndarray. On a memmap this reads only the touched rows' pages —
+        the support-sized working set, never the full matrix."""
+        return np.asarray(self.features[nodes])
+
+    def coo(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(src, dst) int32 edge list in CSR order (dst-major) — derived
+        from the views; used by full-graph packing (`graph_as_support`),
+        which is O(E) by definition."""
+        row_ptr = self.row_ptr
+        counts = np.diff(row_ptr).astype(np.int64)
+        dst = np.repeat(np.arange(self.n, dtype=np.int64),
+                        counts).astype(np.int32)
+        return np.asarray(self.col_idx, np.int32), dst
+
+    def edge_coefficients(self, r: float = 0.5) -> np.ndarray:
+        """Per-edge Â weight in CSR order: coef(j->i) =
+        (d_i+1)^{r-1} (d_j+1)^{-r}, from the persisted degrees."""
+        src, dst = self.coo()
+        dt = (np.asarray(self.degrees) + 1).astype(np.float64)
+        return (dt[dst] ** (r - 1.0) * dt[src] ** (-r)).astype(np.float32)
+
+    def drop_resident(self) -> int:
+        """Release any resident file-backed pages (no-op for in-RAM
+        stores). Returns the estimated bytes released."""
+        return 0
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __repr__(self) -> str:
+        return (f"{type(self).__name__}(name={self.name!r}, n={self.n}, "
+                f"edges={self.num_edges}, f={self.feat_dim})")
+
+
+class InMemoryStore(GraphStore):
+    """Zero-copy wrap of an in-RAM `Graph` — the store the whole repo
+    served from before this module existed, bit-identical: `row_ptr` /
+    `col_idx` ARE `Graph.csr()`'s arrays and `features` IS
+    `graph.features`. The degree/self-loop accounting runs once here
+    (store-build time) instead of per batch — `Graph.degrees` is an
+    O(E) bincount on every access."""
+
+    def __init__(self, graph: Graph):
+        self.graph = graph
+        self.name = graph.name
+        self.n = graph.n
+        self.feat_dim = int(graph.features.shape[1])
+        self.num_classes = graph.num_classes
+        # build-time metadata (PR-6 accounting: actual self loops, never
+        # one-per-node)
+        self.num_self_loops = graph.num_self_loops
+        self.num_edges = graph.num_edges
+        self._degrees = graph.degrees
+
+    @property
+    def row_ptr(self) -> np.ndarray:
+        return self.graph.csr()[0]
+
+    @property
+    def col_idx(self) -> np.ndarray:
+        return self.graph.csr()[1]
+
+    @property
+    def features(self) -> np.ndarray:
+        return self.graph.features
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self._degrees
+
+    @property
+    def labels(self) -> Optional[np.ndarray]:
+        return self.graph.labels
+
+
+class MmapStore(GraphStore):
+    """Graph storage memory-mapped from a store directory.
+
+    Arrays open lazily with ``np.load(mmap_mode="r")`` on first access
+    and stay file-backed: the full feature matrix / edge list is never
+    copied into RAM, only the pages row gathers touch become resident.
+    ``mmap=False`` eagerly loads everything into RAM instead (the
+    in-memory reference the parity gates compare against).
+
+    Residency is BOUNDED, not just lazy — and the hot row-gather path
+    does not go through the mapping at all:
+
+    * `gather_features` reads rows with ``preadv`` (consecutive runs
+      coalesced) straight into the output array. Reads are served from
+      the kernel page cache, which is NOT charged to the process, so
+      feature gathers add ZERO mapped residency no matter how large the
+      graph. (A memmap fancy-index cannot give that bound on modern
+      kernels: the page cache holds warm files in 2 MB large folios and
+      a fault PTE-maps the touched row's entire folio, so one
+      support-sized gather maps nearly the whole file — MADV_RANDOM
+      only disables readahead i/o and MADV_NOHUGEPAGE doesn't stop
+      folio mapping either, both measured. Dropping pages after the
+      fact with MADV_DONTNEED works but costs TLB shootdowns across the
+      compute thread pool, ~2x batch latency in the engine.)
+    * the CSR views (`row_ptr`/`col_idx`/`degrees`) stay memory-mapped
+      for the sampler's random walks, advised ``MADV_RANDOM``; their
+      resident pages are shed with `drop_resident` every
+      ``resident_budget`` bytes of gather traffic, so even the O(E)
+      views can't creep toward file size over a long serving run."""
+
+    def __init__(self, path: str, *, mmap: bool = True,
+                 resident_budget: int = 128 << 20):
+        self.path = os.fspath(path)
+        self._mmap_mode = "r" if mmap else None
+        self.resident_budget = int(resident_budget)
+        self._touched_est = 0
+        self._feat_fd = -1
+        self._feat_off = 0
+        meta_path = os.path.join(self.path, "meta.json")
+        with open(meta_path) as fh:
+            meta = json.load(fh)
+        if meta.get("format") != FORMAT:
+            raise ValueError(f"{meta_path}: unknown store format "
+                             f"{meta.get('format')!r} (expected {FORMAT})")
+        self.meta = meta
+        self.name = meta.get("name", os.path.basename(self.path))
+        self.n = int(meta["n"])
+        self.feat_dim = int(meta["feat_dim"])
+        self.num_classes = int(meta.get("num_classes", 0))
+        self.num_edges = int(meta["num_edges"])
+        self.num_self_loops = int(meta["num_self_loops"])
+        self._views = {}
+
+    def _load(self, key: str) -> Optional[np.ndarray]:
+        if key not in self._views:
+            p = os.path.join(self.path, f"{key}.npy")
+            if not os.path.exists(p):
+                if key == "labels":
+                    self._views[key] = None
+                    return None
+                raise FileNotFoundError(f"store {self.path} missing {p}")
+            arr = np.load(p, mmap_mode=self._mmap_mode)
+            if _HAVE_MADVISE:
+                mm = getattr(arr, "_mmap", None)
+                if mm is not None:
+                    # random-access views: don't let a cold fault pull a
+                    # ~128 KB readahead cluster per touched row
+                    mm.madvise(_mmap.MADV_RANDOM)
+            self._views[key] = arr
+        return self._views[key]
+
+    def _feat_file(self) -> Tuple[int, int]:
+        """(fd, data offset) of features.npy for pread-based gathers."""
+        if self._feat_fd < 0:
+            p = os.path.join(self.path, "features.npy")
+            nbytes = self.n * self.feat_dim * 4
+            off = os.path.getsize(p) - nbytes
+            if off <= 0:
+                raise ValueError(f"{p}: expected {nbytes} bytes of "
+                                 f"float32 data after the .npy header")
+            self._feat_fd = os.open(p, os.O_RDONLY)
+            self._feat_off = off
+        return self._feat_fd, self._feat_off
+
+    def gather_features(self, nodes: np.ndarray) -> np.ndarray:
+        if self._mmap_mode is None:
+            return np.asarray(self.features[nodes])
+        nodes = np.atleast_1d(np.asarray(nodes)).astype(np.int64,
+                                                        copy=False)
+        row = self.feat_dim * 4
+        fd, base = self._feat_file()
+        out = np.empty((len(nodes), self.feat_dim), np.float32)
+        flat = memoryview(out).cast("B")
+        # one preadv per run of consecutive node ids (support node lists
+        # are sorted, so runs do occur on smaller graphs)
+        k = len(nodes)
+        bounds = np.nonzero(np.diff(nodes) != 1)[0] + 1
+        edges = np.concatenate(([0], bounds, [k]))
+        preadv = os.preadv
+        for b in range(len(edges) - 1):
+            i, j = int(edges[b]), int(edges[b + 1])
+            want = (j - i) * row
+            if preadv(fd, [flat[i * row:j * row]],
+                      base + int(nodes[i]) * row) != want:
+                raise IOError(f"{self.path}/features.npy: short read at "
+                              f"row {int(nodes[i])}")
+        self._touched_est += k * row
+        if self._touched_est >= self.resident_budget:
+            self.drop_resident()
+        return out
+
+    def drop_resident(self) -> int:
+        """Drop the mapped views' resident pages back to the page cache
+        (``MADV_DONTNEED``): process RSS shrinks, the sampler's next
+        walk minor-faults the pages back without disk I/O. Returns the
+        gathered-bytes estimate that was outstanding."""
+        est, self._touched_est = self._touched_est, 0
+        if not _HAVE_MADVISE or self._mmap_mode is None:
+            return 0
+        for arr in self._views.values():
+            mm = getattr(arr, "_mmap", None)
+            if mm is not None:
+                mm.madvise(_mmap.MADV_DONTNEED)
+        return est
+
+    def __del__(self):
+        fd = getattr(self, "_feat_fd", -1)
+        if fd >= 0:
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+
+    @property
+    def row_ptr(self) -> np.ndarray:
+        return self._load("row_ptr")
+
+    @property
+    def col_idx(self) -> np.ndarray:
+        return self._load("col_idx")
+
+    @property
+    def features(self) -> np.ndarray:
+        return self._load("features")
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self._load("degrees")
+
+    @property
+    def labels(self) -> Optional[np.ndarray]:
+        return self._load("labels")
+
+
+def as_store(obj, *, warn: bool = False) -> GraphStore:
+    """Normalize a `GraphStore` | `Graph` argument to a store.
+
+    A raw `Graph` is wrapped in an `InMemoryStore` memoized ON the graph
+    object, so repeated calls (one per served batch) reuse the cached
+    degree metadata and sampler scratch instead of recounting. `warn`
+    additionally emits the `sample_support` deprecation for positional
+    Graph callers."""
+    if isinstance(obj, GraphStore):
+        return obj
+    if isinstance(obj, Graph):
+        if warn:
+            warnings.warn(
+                "passing a raw Graph is deprecated; pass a GraphStore "
+                "(wrap with repro.gnn.store.InMemoryStore, or serve an "
+                "on-disk graph with MmapStore)", DeprecationWarning,
+                stacklevel=3)
+        store = obj.__dict__.get("_store_cache")
+        if store is None:
+            store = InMemoryStore(obj)
+            obj.__dict__["_store_cache"] = store
+        return store
+    raise TypeError(f"expected a GraphStore or Graph, got "
+                    f"{type(obj).__name__}")
+
+
+def save_graph_store(g: Graph, path: str) -> str:
+    """Persist a `Graph` as a store directory. The saved `row_ptr` /
+    `col_idx` are exactly `Graph.csr()`'s arrays, so an `MmapStore` of
+    the result is bit-identical to `InMemoryStore(g)` — the property the
+    store parity tests pin."""
+    os.makedirs(path, exist_ok=True)
+    row_ptr, col_idx = g.csr()
+    np.save(os.path.join(path, "row_ptr.npy"),
+            np.asarray(row_ptr, np.int64))
+    np.save(os.path.join(path, "col_idx.npy"),
+            np.asarray(col_idx, np.int32))
+    np.save(os.path.join(path, "features.npy"),
+            np.asarray(g.features, np.float32))
+    np.save(os.path.join(path, "degrees.npy"), np.asarray(g.degrees))
+    np.save(os.path.join(path, "labels.npy"), np.asarray(g.labels, np.int32))
+    meta = {"format": FORMAT, "name": g.name, "n": int(g.n),
+            "feat_dim": int(g.features.shape[1]),
+            "num_classes": int(g.num_classes),
+            "num_edges": int(g.num_edges),
+            "num_self_loops": int(g.num_self_loops)}
+    with open(os.path.join(path, "meta.json"), "w") as fh:
+        json.dump(meta, fh, indent=1)
+        fh.write("\n")
+    return path
+
+
+# ------------------------------------------------------------ generator
+_CHUNK_ROWS = 1 << 17      # fixed chunk size => chunked and in-RAM
+                           # generation are bit-identical under one seed
+
+
+def _powerlaw_degrees(rng: np.random.Generator, n: int, avg_deg: float,
+                      alpha: float, max_deg: int) -> np.ndarray:
+    """In-degree sequence: Pareto(alpha - 1) tail rescaled to hit
+    `avg_deg` in expectation, clipped to [1, max_deg]."""
+    w = rng.pareto(max(alpha - 1.0, 0.05), n) + 1.0
+    deg = np.maximum(np.rint(w * (avg_deg / w.mean())), 1.0)
+    return np.minimum(deg, max_deg).astype(np.int64)
+
+
+def make_graph(n: int, avg_deg: float = 16.0, alpha: float = 2.2,
+               seed: int = 0, *, path: Optional[str] = None,
+               feat_dim: int = 64, num_classes: int = 16,
+               max_deg: Optional[int] = None,
+               name: Optional[str] = None) -> GraphStore:
+    """Synthetic power-law graph at store scale, deterministic under
+    `seed` (one `np.random.Generator`, fixed chunk boundaries).
+
+    Per-node in-degrees follow a clipped Pareto tail with exponent
+    `alpha` (hub rows exist but are bounded by `max_deg`, default
+    ``32 * avg_deg`` — frontier expansion through a hub stays
+    support-sized, the same reason production samplers cap fan-in).
+    Neighbor ids are uniform, each row carries its self loop (stored
+    LAST, matching `repro.gnn.graph.add_self_loops` + CSR order), and
+    features are class prototypes + noise so classification is
+    non-degenerate.
+
+    ``path=None`` materializes in RAM and returns an `InMemoryStore`
+    (small-n tests); with ``path`` set every O(n)/O(E) array streams to
+    ``.npy`` in fixed-size chunks — peak generator memory is
+    O(n) int64 scratch plus one chunk, never the feature matrix — and
+    the result is the `MmapStore` of that directory."""
+    if n < 2:
+        raise ValueError(f"need n >= 2 nodes, got {n}")
+    if seed is None:
+        raise ValueError("make_graph requires an explicit integer seed "
+                         "(bench graphs must be reproducible across "
+                         "processes)")
+    rng = np.random.default_rng(seed)
+    max_deg = int(max_deg if max_deg is not None
+                  else max(64, 32 * avg_deg))
+    max_deg = min(max_deg, n - 1)
+    deg = _powerlaw_degrees(rng, n, avg_deg, alpha, max_deg)
+    counts = deg + 1                        # + the self loop, stored last
+    row_ptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=row_ptr[1:])
+    total = int(row_ptr[-1])
+
+    if path is not None:
+        os.makedirs(path, exist_ok=True)
+
+        def _open(key, shape, dtype):
+            return np.lib.format.open_memmap(
+                os.path.join(path, f"{key}.npy"), mode="w+",
+                dtype=dtype, shape=shape)
+    else:
+        def _open(key, shape, dtype):
+            return np.zeros(shape, dtype)
+
+    col_idx = _open("col_idx", (total,), np.int32)
+    # neighbors chunked by node range: uniform sources drawn from
+    # [0, n-1) and shifted past the row's own id (EXACTLY one self loop
+    # per row, stored last — accidental loops would desync the
+    # store-build degree metadata from a recount), duplicates allowed
+    # (multi-edges, like any sampled graph)
+    for lo in range(0, n, _CHUNK_ROWS):
+        hi = min(lo + _CHUNK_ROWS, n)
+        k = int(row_ptr[hi] - row_ptr[lo])
+        rows = np.repeat(np.arange(lo, hi, dtype=np.int64),
+                         counts[lo:hi])
+        span = rng.integers(0, n - 1, size=k, dtype=np.int64)
+        span += span >= rows
+        # overwrite each row's last slot with the self loop
+        ends = (row_ptr[lo + 1:hi + 1] - row_ptr[lo] - 1).astype(np.int64)
+        span[ends] = np.arange(lo, hi, dtype=np.int64)
+        col_idx[int(row_ptr[lo]):int(row_ptr[hi])] = \
+            span.astype(np.int32)
+
+    labels = _open("labels", (n,), np.int32)
+    protos = rng.standard_normal((num_classes, feat_dim)).astype(np.float32)
+    features = _open("features", (n, feat_dim), np.float32)
+    for lo in range(0, n, _CHUNK_ROWS):
+        hi = min(lo + _CHUNK_ROWS, n)
+        lab = rng.integers(0, num_classes, size=hi - lo).astype(np.int32)
+        labels[lo:hi] = lab
+        noise = rng.standard_normal((hi - lo, feat_dim)).astype(np.float32)
+        features[lo:hi] = protos[lab] + 1.5 * noise
+
+    degrees = _open("degrees", (n,), np.int64)
+    degrees[:] = deg
+    name = name or f"powerlaw-n{n}-d{avg_deg:g}-a{alpha:g}-s{seed}"
+    # undirected-m convention of Graph.num_edges: (stored - loops) // 2
+    num_edges = (total - n) // 2
+
+    if path is None:
+        src = np.asarray(col_idx, np.int32)
+        dst = np.repeat(np.arange(n, dtype=np.int64),
+                        counts).astype(np.int32)
+        g = Graph(n=n, src=src, dst=dst,
+                  features=features, labels=labels,
+                  num_classes=num_classes,
+                  train_idx=np.empty(0, np.int32),
+                  unlabeled_idx=np.empty(0, np.int32),
+                  test_idx=np.arange(n, dtype=np.int32), name=name)
+        return as_store(g)
+
+    np.save(os.path.join(path, "row_ptr.npy"), row_ptr)
+    for arr in (col_idx, labels, features, degrees):
+        arr.flush()
+    del col_idx, labels, features, degrees
+    meta = {"format": FORMAT, "name": name, "n": int(n),
+            "feat_dim": int(feat_dim), "num_classes": int(num_classes),
+            "num_edges": int(num_edges), "num_self_loops": int(n),
+            "generator": {"avg_deg": float(avg_deg), "alpha": float(alpha),
+                          "seed": int(seed), "max_deg": int(max_deg)}}
+    with open(os.path.join(path, "meta.json"), "w") as fh:
+        json.dump(meta, fh, indent=1)
+        fh.write("\n")
+    return MmapStore(path)
+
+
+def _main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Generate a power-law graph store on disk "
+                    "(the serving bench runs this in a subprocess so "
+                    "generation never pollutes the serving process's "
+                    "peak RSS).")
+    ap.add_argument("--n", type=int, required=True)
+    ap.add_argument("--avg-deg", type=float, default=16.0)
+    ap.add_argument("--alpha", type=float, default=2.2)
+    ap.add_argument("--seed", type=int, required=True)
+    ap.add_argument("--feat-dim", type=int, default=64)
+    ap.add_argument("--num-classes", type=int, default=16)
+    ap.add_argument("--max-deg", type=int, default=None)
+    ap.add_argument("--out", required=True, help="store directory")
+    args = ap.parse_args(argv)
+    store = make_graph(args.n, args.avg_deg, args.alpha, args.seed,
+                       path=args.out, feat_dim=args.feat_dim,
+                       num_classes=args.num_classes, max_deg=args.max_deg)
+    print(f"wrote {store!r} -> {args.out}")
+
+
+if __name__ == "__main__":
+    _main()

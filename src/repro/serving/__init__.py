@@ -1,8 +1,9 @@
-from repro.serving.engine import EngineStats, NAIServingEngine, Request
+from repro.serving.engine import (EngineConfig, EngineStats,
+                                  NAIServingEngine, Request)
 from repro.serving.frontend import (ClassStats, ServingFrontend, SLOClass,
                                     default_slo_classes)
 from repro.serving.lm_engine import LMRequest, LMServingEngine
 
-__all__ = ["EngineStats", "NAIServingEngine", "Request", "ClassStats",
-           "ServingFrontend", "SLOClass", "default_slo_classes",
-           "LMRequest", "LMServingEngine"]
+__all__ = ["EngineConfig", "EngineStats", "NAIServingEngine", "Request",
+           "ClassStats", "ServingFrontend", "SLOClass",
+           "default_slo_classes", "LMRequest", "LMServingEngine"]

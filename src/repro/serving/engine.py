@@ -100,16 +100,65 @@ import numpy as np
 
 from jax.sharding import NamedSharding
 
-from repro.gnn.backends import (GATHER_MODES, get_backend, normalize_mesh,
-                                operand_logical, pack_operands)
-from repro.gnn.graph import Graph
+from repro.gnn.backends import (BACKENDS, GATHER_MODES, get_backend,
+                                normalize_mesh, operand_logical,
+                                pack_operands)
 from repro.gnn.models import GNNConfig
 from repro.gnn.nai import (NAIConfig, infer_batch_host, make_compiled_infer,
                            support_stationary_factors)
 from repro.gnn.packing import (CB, PackedSupport, batch_bucket,
                                pack_support, step_active_blocks)
 from repro.gnn.sampler import sample_support
+from repro.gnn.store import as_store
 from repro.sharding.logical import spec
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Validated serving-engine configuration.
+
+    Consolidates what used to be a sprawl of `NAIServingEngine` keyword
+    arguments into one declarative object (construction-time checks,
+    mirroring `NAIConfig.__post_init__`), so per-SLO-class engine
+    configs in the front-end are data, not call-site argument lists.
+    `NAIServingEngine(..., config=EngineConfig(...))` and the legacy
+    kwargs form are equivalent — the kwargs path builds an EngineConfig
+    internally, so both get identical validation.
+    """
+    mode: str = "host"               # "host" (numpy) | "compiled"
+    spmm_impl: str = "block_ell"     # registered PropagationBackend name
+    gather_mode: str = "halo"        # sharded frontier exchange
+    pipeline_depth: int = 1          # 1 = serial, 2 = one batch in flight
+    max_wait_s: float = 0.01         # batch former age bound
+    interpret: bool = True           # Pallas interpret mode (CPU CI)
+    donate: Optional[bool] = None    # operand donation (None = backend)
+    latency_window: int = 4096       # LatencyRing capacity
+    mesh: object = None              # mesh with a "data" axis, or None
+
+    def __post_init__(self):
+        if self.mode not in ("host", "compiled"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if self.spmm_impl not in BACKENDS:
+            raise ValueError(f"unknown spmm_impl {self.spmm_impl!r} "
+                             f"(one of {sorted(BACKENDS)})")
+        if self.gather_mode not in GATHER_MODES:
+            raise ValueError(f"unknown gather_mode {self.gather_mode!r} "
+                             f"(one of {GATHER_MODES})")
+        if self.pipeline_depth < 1:
+            raise ValueError(f"pipeline_depth must be >= 1, got "
+                             f"{self.pipeline_depth}")
+        if self.pipeline_depth > 1 and self.mode != "compiled":
+            raise ValueError("pipelining overlaps host pack with device "
+                             "compute; mode='host' has no device stage")
+        if self.mesh is not None and self.mode != "compiled":
+            raise ValueError("sharded serving (mesh=) requires "
+                             "mode='compiled'")
+        if self.max_wait_s < 0:
+            raise ValueError(f"max_wait_s must be >= 0, got "
+                             f"{self.max_wait_s}")
+        if self.latency_window < 1:
+            raise ValueError(f"latency_window must be >= 1, got "
+                             f"{self.latency_window}")
 
 
 @dataclasses.dataclass
@@ -201,33 +250,28 @@ class _Inflight:
 
 
 class NAIServingEngine:
-    def __init__(self, cfg: GNNConfig, nai: NAIConfig, params, graph: Graph,
-                 *, max_wait_s: float = 0.01, mode: str = "host",
-                 spmm_impl: str = "block_ell", interpret: bool = True,
-                 pipeline_depth: int = 1, donate: Optional[bool] = None,
-                 latency_window: int = 4096, mesh=None,
-                 gather_mode: str = "halo"):
-        if mode not in ("host", "compiled"):
-            raise ValueError(f"unknown mode {mode!r}")
-        if gather_mode not in GATHER_MODES:
-            raise ValueError(f"unknown gather_mode {gather_mode!r} "
-                             f"(one of {GATHER_MODES})")
-        if pipeline_depth < 1:
-            raise ValueError(f"pipeline_depth must be >= 1, got "
-                             f"{pipeline_depth}")
-        if pipeline_depth > 1 and mode != "compiled":
-            raise ValueError("pipelining overlaps host pack with device "
-                             "compute; mode='host' has no device stage")
-        if mesh is not None:
-            if mode != "compiled":
-                raise ValueError("sharded serving (mesh=) requires "
-                                 "mode='compiled'")
-            mesh = normalize_mesh(mesh)
+    def __init__(self, cfg: GNNConfig, nai: NAIConfig, params, graph,
+                 *, config: Optional[EngineConfig] = None, **kwargs):
+        """`graph` is a `GraphStore` (or a raw `Graph`, wrapped via
+        `as_store`). Engine options come either as one validated
+        ``config=EngineConfig(...)`` or as the legacy keyword arguments
+        (``mode=``, ``spmm_impl=``, ...) — never both; the kwargs path
+        just builds an `EngineConfig`, so validation is identical."""
+        if config is not None and kwargs:
+            raise ValueError(
+                f"pass either config=EngineConfig(...) or engine kwargs, "
+                f"not both (got kwargs {sorted(kwargs)})")
+        ec = config if config is not None else EngineConfig(**kwargs)
+        mesh = normalize_mesh(ec.mesh) if ec.mesh is not None else None
+        mode, gather_mode = ec.mode, ec.gather_mode
+        spmm_impl, pipeline_depth = ec.spmm_impl, ec.pipeline_depth
+        self.config = ec
         self.cfg = cfg
         self.nai = nai
         self.params = params
+        self.store = as_store(graph)
         self.graph = graph
-        self.max_wait_s = max_wait_s
+        self.max_wait_s = ec.max_wait_s
         self.mode = mode
         self.spmm_impl = spmm_impl
         self.mesh = mesh
@@ -242,7 +286,7 @@ class NAIServingEngine:
             "halo_frac": 0.0}
         self.pipeline_depth = pipeline_depth
         self.queue: Deque[Request] = deque()
-        self.stats = EngineStats(latencies=LatencyRing(latency_window))
+        self.stats = EngineStats(latencies=LatencyRing(ec.latency_window))
         # compiled-path state: jitted runner + bucket high-water marks
         # keyed by padded batch size
         # -> (s_bucket, tb_bucket, e_bucket, h_bucket, hb_bucket)
@@ -274,8 +318,8 @@ class NAIServingEngine:
                                         spec(*dims, mesh=self.mesh))
                     for name, dims in logical.items()}
             self._runner = make_compiled_infer(
-                cfg, nai, spmm_impl=spmm_impl, interpret=interpret,
-                donate=donate, mesh=self.mesh,
+                cfg, nai, spmm_impl=spmm_impl, interpret=ec.interpret,
+                donate=ec.donate, mesh=self.mesh,
                 gather_mode=self.gather_mode)
             self._cls_params = {
                 l: {k: jnp.asarray(v) for k, v in p.items()}
@@ -298,18 +342,20 @@ class NAIServingEngine:
         """Sample the support and pack it into a pooled buffer set,
         plus the static per-step row-block predicate for the Pallas
         impls. `nodes` must be duplicate-free. Pure host work — no jax
-        calls."""
-        g, cfg, nai = self.graph, self.cfg, self.nai
+        calls, and no full-graph arrays: everything reads through the
+        store's row-gather view API, so an `MmapStore` only pages in the
+        support's rows."""
+        store, cfg, nai = self.store, self.cfg, self.nai
         be = self._backend
-        sup = sample_support(g, nodes, nai.t_max, cfg.r)
+        sup = sample_support(store, nodes, nai.t_max, cfg.r)
         nb = sup.n_batch
-        x0 = g.features[sup.nodes].astype(np.float32)
+        x0 = store.gather_features(sup.nodes).astype(np.float32)
         # dense x_inf is built from the f32 factors so the fused kernel
         # (which streams the factors and multiplies in f32) is
         # bit-consistent with the dense block_ell/segment distance; in
         # fused mode the dense matrix is never materialized at all —
         # a zero-column placeholder carries just the batch-row count
-        c_inf, s_inf = support_stationary_factors(g, sup, x0, cfg.r)
+        c_inf, s_inf = support_stationary_factors(store, sup, x0, cfg.r)
         c_inf = c_inf.astype(np.float32)
         s_inf = s_inf.astype(np.float32)
         if be.uses_dense_x_inf:
@@ -491,7 +537,7 @@ class NAIServingEngine:
         uniq, inv = np.unique(nodes, return_inverse=True)
         if self.mode == "host":
             p_u, o_u, _, _, _ = infer_batch_host(
-                self.cfg, self.nai, self.params, self.graph, uniq)
+                self.cfg, self.nai, self.params, self.store, uniq)
             self._complete(batch, p_u[inv], o_u[inv], time.perf_counter())
             return batch
         t0 = time.perf_counter()

@@ -53,7 +53,7 @@ import time
 from typing import Dict, List, Optional, Sequence
 
 from repro.gnn.nai import NAIConfig
-from repro.serving.engine import (EngineStats, LatencyRing,
+from repro.serving.engine import (EngineConfig, EngineStats, LatencyRing,
                                   NAIServingEngine, Request)
 
 
@@ -61,12 +61,19 @@ from repro.serving.engine import (EngineStats, LatencyRing,
 class SLOClass:
     """One latency tier: a name, the engine config it compiles
     (the T_max knob), its default per-request latency budget, the batch
-    former's age bound, and the backpressure depth of its lane."""
+    former's age bound, and the backpressure depth of its lane.
+
+    ``engine`` optionally pins a full per-class `EngineConfig` (e.g. a
+    different spmm_impl or pipeline depth per tier); classes that leave
+    it None inherit the front-end's base config. Either way the class's
+    ``max_wait_s`` overrides the config's age bound — the SLO class owns
+    its latency knobs."""
     name: str
     nai: NAIConfig
     deadline_s: float            # default latency budget per request
     max_wait_s: float            # close a partial batch at this age
     queue_depth: int = 256       # reject (shed) submits beyond this
+    engine: Optional[EngineConfig] = None   # per-class engine override
 
     def __post_init__(self):
         if not self.name:
@@ -126,29 +133,41 @@ class ServingFrontend:
     """Routes single requests into per-SLO-class `NAIServingEngine`s.
 
     ``classes`` is an ordered sequence of `SLOClass`; the first is the
-    default routing target. Engine construction kwargs (``spmm_impl``,
-    ``interpret``, ``mesh``, ``gather_mode``, ``donate``,
-    ``latency_window``) pass through to every class engine; each engine
-    gets its class's `NAIConfig` and `max_wait_s`.
+    default routing target. The base engine configuration comes either
+    as one ``engine=EngineConfig(...)`` or as the legacy keyword
+    arguments (``mode=``, ``spmm_impl=``, ``mesh=``, ...) — not both.
+    Each class engine gets the base config (or the class's own
+    ``engine`` override) with the class's `NAIConfig` and `max_wait_s`
+    substituted in, so per-SLO-class engine configs are declarative.
     """
 
     def __init__(self, cfg, params, graph,
-                 classes: Sequence[SLOClass], *, mode: str = "compiled",
-                 pipeline_depth: int = 1, latency_window: int = 4096,
-                 **engine_kwargs):
+                 classes: Sequence[SLOClass], *,
+                 engine: Optional[EngineConfig] = None,
+                 mode: str = "compiled", pipeline_depth: int = 1,
+                 latency_window: int = 4096, **engine_kwargs):
         if not classes:
             raise ValueError("need at least one SLO class")
         names = [c.name for c in classes]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate SLO class names: {names}")
+        if engine is not None and engine_kwargs:
+            raise ValueError(
+                f"pass either engine=EngineConfig(...) or engine kwargs, "
+                f"not both (got kwargs {sorted(engine_kwargs)})")
+        base = engine if engine is not None else EngineConfig(
+            mode=mode, pipeline_depth=pipeline_depth,
+            latency_window=latency_window, **engine_kwargs)
         self.classes: Dict[str, SLOClass] = {c.name: c for c in classes}
         self.default_class = classes[0].name
-        self.pipeline_depth = pipeline_depth
+        self.engine_config = base
+        self.pipeline_depth = base.pipeline_depth
         self.engines: Dict[str, NAIServingEngine] = {
             c.name: NAIServingEngine(
-                cfg, c.nai, params, graph, max_wait_s=c.max_wait_s,
-                mode=mode, pipeline_depth=pipeline_depth,
-                latency_window=latency_window, **engine_kwargs)
+                cfg, c.nai, params, graph,
+                config=dataclasses.replace(
+                    c.engine if c.engine is not None else base,
+                    max_wait_s=c.max_wait_s))
             for c in classes}
         self.stats: Dict[str, ClassStats] = {
             c.name: ClassStats() for c in classes}
