@@ -1,0 +1,492 @@
+"""Chaos benchmark: goodput under seeded fault schedules through the
+full serving stack (store -> engine pipeline -> SLO front-end).
+
+`benchmarks.frontend_bench` measures the fault-FREE serving story; this
+bench drives deterministic `FaultPlan` schedules (repro.serving.faults)
+through the same stack and gates the failure story:
+
+* **Conservation** (the system property that makes isolation real, not
+  a pile of try/excepts): under EVERY scenario, each submitted request
+  terminates exactly once — ``offered == rejected + completed + failed``
+  per class, no request lost, none finalized twice, nothing pending
+  after the drain — and the pipeline never deadlocks (wall-clock
+  bounded drain).
+* **Fault-free bit-parity**: a front-end with the whole isolation stack
+  armed but idle (empty plan, watchdog, NaN guard, breaker) serves a
+  deterministic virtual-clock trace bit-identically to a plain
+  front-end — zero failed/degraded requests, zero breaker transitions,
+  identical predictions and exit orders.
+* **Goodput under faults**: the committed ``baseline`` scenario (1%
+  random batch failures plus a concentrated burst that trips the gold
+  circuit breaker) must keep total goodput within ``min_ratio`` of the
+  clean run — demotion onto the best-effort engine and the bounded
+  shed are what hold it up — and the breaker's open/half-open/closed
+  transitions are recorded in the payload.
+
+Scenarios (all seeded, all replayable):
+
+  ``clean``          empty plan, breaker armed — the goodput denominator
+  ``store_io``       injected StoreIOError + latency on gathers, with
+                     the reference-path retry recovering most batches
+  ``host_crash``     host-stage exceptions + straggler sleeps (gold)
+  ``device_nan``     NaN logits from the device stage; the NaN guard
+                     fails the batch, the retry completes it host-side
+  ``hang_watchdog``  a never-ready device future; the watchdog declares
+                     the batch hung and re-arms the pipeline
+  ``baseline``       1% device faults + a burst window: breaker trips,
+                     demotes gold onto best_effort, recovers via probes
+
+Runnable standalone::
+
+    PYTHONPATH=src python -m benchmarks.chaos_bench [--smoke] [--check]
+                                                    [--out F]
+
+Full runs merge the payload under the ``"chaos"`` key of
+``BENCH_serving.json``; ``--smoke`` writes a standalone (gitignored)
+``BENCH_chaos_smoke.json``. ``--check`` exits nonzero on any
+conservation/parity/goodput/breaker gate failure — the CI guard.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+if __package__ in (None, ""):     # `python benchmarks/chaos_bench.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [_root, os.path.join(_root, "src")]
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.gnn import GNNConfig, init_classifiers, load_dataset
+from repro.gnn.nai import NAIConfig
+from repro.gnn.store import as_store
+from repro.serving import (BreakerConfig, EngineConfig, FaultPlan,
+                           FaultSpec, FaultyStore, ServingFrontend,
+                           SLOClass)
+
+IMPL = "segment"          # reference backend: cheap, real async dispatch
+BUDGET_S = 2.0            # per-request deadline budget (generous: the
+                          # bench gates failure handling, not latency)
+MIN_GOODPUT_RATIO = 0.5   # baseline-vs-clean goodput gate (stated
+                          # fraction; typical observed ratio is ~1.0
+                          # because demotion keeps gold completing)
+
+
+def _setup(smoke: bool):
+    g = load_dataset("pubmed-like", scale=0.02 if smoke else 0.05, seed=0)
+    feat = 64
+    g = dataclasses.replace(
+        g, features=np.ascontiguousarray(g.features[:, :feat]))
+    cfg = GNNConfig("sgc", feat, g.num_classes, k=2, hidden=32,
+                    mlp_layers=2)
+    params = {"cls": init_classifiers(cfg, jax.random.PRNGKey(0))}
+    nai = NAIConfig(t_s=6.0, t_min=1, t_max=2,
+                    batch_size=8 if smoke else 16)
+    return g, cfg, params, nai
+
+
+def _breaker() -> BreakerConfig:
+    # misses are excluded so tripping is failure-driven — a contended CI
+    # runner's latency noise must not open breakers in the clean run
+    return BreakerConfig(window=32, trip_frac=0.5, min_events=16,
+                         cooldown_s=0.3, probes=2, open_depth_frac=0.5,
+                         count_misses=False)
+
+
+def _frontend(g, cfg, params, nai, *, gold_plan: Optional[FaultPlan],
+              watchdog: Optional[float], retry: bool,
+              breaker: Optional[BreakerConfig], depth: int = 2
+              ) -> ServingFrontend:
+    """Two-tier front-end; the fault plan (if any) rides on the GOLD
+    engine's config, so best_effort stays a clean degradation target."""
+    qd = 4 * nai.batch_size
+    base = dict(mode="compiled", spmm_impl=IMPL, pipeline_depth=depth,
+                watchdog_s=watchdog, retry_failed=retry)
+    classes = [
+        SLOClass("gold", nai, deadline_s=BUDGET_S, max_wait_s=0.002,
+                 queue_depth=qd, demote_to="best_effort",
+                 engine=EngineConfig(**base, faults=gold_plan)),
+        SLOClass("best_effort", dataclasses.replace(nai, t_max=nai.t_min),
+                 deadline_s=BUDGET_S, max_wait_s=0.002, queue_depth=qd),
+    ]
+    return ServingFrontend(cfg, params, g, classes, breaker=breaker,
+                           engine=EngineConfig(**base))
+
+
+# ------------------------------------------------ conservation ledger
+def _conservation(fe: ServingFrontend, accepted: List, terminal: List
+                  ) -> List[str]:
+    errs = []
+    ids = [id(r) for r in terminal]
+    if len(ids) != len(set(ids)):
+        errs.append("a request was finalized more than once")
+    if set(ids) != set(id(r) for r in accepted):
+        errs.append(f"lost/phantom requests: accepted {len(accepted)}, "
+                    f"terminal {len(set(ids))}")
+    if fe.pending() != 0:
+        errs.append(f"{fe.pending()} requests still pending after drain")
+    for r in accepted:
+        if r.status not in ("completed", "failed"):
+            errs.append(f"non-terminal status {r.status!r} after drain")
+            break
+    for name, st in fe.stats.items():
+        if st.offered != st.accepted + st.rejected:
+            errs.append(f"{name}: offered {st.offered} != accepted "
+                        f"{st.accepted} + rejected {st.rejected}")
+        if st.accepted != st.completed + st.failed:
+            errs.append(f"{name}: accepted {st.accepted} != completed "
+                        f"{st.completed} + failed {st.failed}")
+    return errs
+
+
+# --------------------------------------------- fault-free parity gate
+def _trace(g, nai, n_bursts: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    events: List[Tuple[float, str, int]] = []
+    t = 0.0
+    for _ in range(n_bursts):
+        size = int(rng.integers(nai.batch_size // 2,
+                                2 * nai.batch_size + 1))
+        for nid in rng.choice(g.test_idx, size=size, replace=True):
+            cls = "gold" if rng.random() < 0.5 else "best_effort"
+            events.append((t, cls, int(nid)))
+            t += 1e-4
+        t += 0.2
+    return events
+
+
+def _replay(fe: ServingFrontend, events) -> List:
+    reqs = []
+    for t, cls, nid in events:
+        r = fe.submit(nid, cls, now=t, budget_s=1e9)
+        assert r is not None
+        reqs.append(r)
+        fe.step(now=t)
+    fe.step(now=events[-1][0] + 100.0)
+    fe.flush()
+    return reqs
+
+
+def _parity_fault_free(g, cfg, params, nai, smoke: bool) -> Dict:
+    """The isolation stack armed but idle must be invisible: identical
+    predictions/exit orders, zero failed/degraded, zero transitions."""
+    events = _trace(g, nai, n_bursts=4 if smoke else 8, seed=1)
+    plain = _frontend(g, cfg, params, nai, gold_plan=None, watchdog=None,
+                      retry=False, breaker=None)
+    wired = _frontend(g, cfg, params, nai, gold_plan=FaultPlan(),
+                      watchdog=5.0, retry=True, breaker=_breaker())
+    r0 = _replay(plain, events)
+    r1 = _replay(wired, events)
+    bit_identical = (
+        [(r.node_id, r.prediction, r.exit_order) for r in r0]
+        == [(r.node_id, r.prediction, r.exit_order) for r in r1])
+    errs = _conservation(wired, r1, r1)
+    out = {
+        "trace_requests": len(events),
+        "parity_fault_free": bool(bit_identical),
+        "wired_failed": sum(st.failed for st in wired.stats.values()),
+        "wired_degraded": sum(st.degraded
+                              for st in wired.stats.values()),
+        "breaker_transitions": sum(len(b.transitions)
+                                   for b in wired.breakers.values()),
+        "conservation_errors": errs,
+    }
+    plain.close()
+    wired.close()
+    return out
+
+
+# ------------------------------------------------------ scenario runs
+def _run_scenario(name: str, g, cfg, params, nai, smoke: bool,
+                  *, gold_plan: Optional[FaultPlan] = None,
+                  store_plan: Optional[FaultPlan] = None,
+                  watchdog: Optional[float] = None, retry: bool = False,
+                  recover: bool = False) -> Dict:
+    """Real-clock run of one fault schedule: seeded bursty arrivals,
+    non-blocking pumping, bounded drain, conservation ledger."""
+    bursts = 8 if smoke else 16
+    burst_size = int(1.5 * nai.batch_size)
+    wall_guard = 60.0
+    store_inj = store_plan.injector() if store_plan is not None else None
+    graph = (FaultyStore(as_store(g), store_inj)
+             if store_inj is not None else g)
+    fe = _frontend(graph, cfg, params, nai, gold_plan=gold_plan,
+                   watchdog=watchdog, retry=retry, breaker=_breaker())
+    rng = np.random.default_rng(17)
+    accepted: List = []
+    terminal: List = []
+    t0 = time.perf_counter()
+    deadline = t0 + wall_guard
+
+    def pump(budget_s: float) -> None:
+        guard = time.perf_counter() + budget_s
+        while time.perf_counter() < min(guard, deadline):
+            terminal.extend(fe.step())
+            if not fe.pending():
+                return
+            time.sleep(5e-4)
+
+    def offer(size: int) -> None:
+        for nid in rng.choice(g.test_idx, size=size, replace=True):
+            cls = "gold" if rng.random() < 0.6 else "best_effort"
+            r = fe.submit(int(nid), cls, budget_s=BUDGET_S)
+            if r is not None:
+                accepted.append(r)
+
+    for _ in range(bursts):
+        offer(burst_size)
+        pump(0.05 if watchdog is None else watchdog + 0.1)
+    if recover:
+        # keep offering gold probes until the breaker closes again (or
+        # the wall guard trips) — the recovery arc is part of the gate
+        brk = fe.breakers["gold"]
+        while (brk.state != "closed"
+               and time.perf_counter() < deadline):
+            offer(4)
+            pump(0.1)
+            time.sleep(0.05)
+    pump(wall_guard)                      # bounded drain
+    deadlock = fe.pending() != 0
+    if not deadlock:
+        terminal.extend(fe.flush())
+    wall_s = time.perf_counter() - t0
+
+    brk = fe.breakers["gold"]
+    errs = [] if deadlock else _conservation(fe, accepted, terminal)
+    totals = {k: sum(getattr(st, k) for st in fe.stats.values())
+              for k in ("offered", "accepted", "rejected", "completed",
+                        "failed", "retried", "degraded",
+                        "deadline_hits")}
+    injectors = {}
+    for cname, eng in fe.engines.items():
+        if eng.fault_stats:
+            injectors[cname] = eng.fault_stats
+    if store_inj is not None:
+        injectors["store"] = store_inj.summary()
+    out = {
+        "name": name,
+        "faults": {
+            "gold": gold_plan.describe() if gold_plan else [],
+            "store": store_plan.describe() if store_plan else [],
+            "watchdog_s": watchdog, "retry_failed": retry,
+        },
+        "wall_s": round(wall_s, 3),
+        "deadlock": bool(deadlock),
+        "conservation_errors": errs,
+        "classes": fe.summary(),
+        "totals": totals,
+        "goodput_frac": (totals["deadline_hits"]
+                         / max(totals["offered"], 1)),
+        "breaker": {
+            "state": brk.state, "trips": brk.trips,
+            "transitions": [[round(t - t0, 3), a, b]
+                            for t, a, b in brk.transitions],
+        },
+        "injectors": injectors,
+    }
+    fe.close()
+    return out
+
+
+def _scenarios(smoke: bool) -> List[Dict]:
+    burst_idx = tuple(range(4, 10))
+    return [
+        dict(name="clean"),
+        # every non-clean schedule carries at least one positional
+        # anchor (at=) so the gate "this scenario fired" is guaranteed,
+        # not left to a rate draw over a few dozen events
+        dict(name="store_io", retry=True,
+             store_plan=FaultPlan([
+                 FaultSpec("store_read", rate=0.04, at=(3,)),
+                 FaultSpec("store_latency", rate=0.1, delay_s=0.002),
+             ], seed=11)),
+        dict(name="host_crash",
+             gold_plan=FaultPlan([
+                 FaultSpec("host", rate=0.12, at=(2,)),
+                 FaultSpec("slow", rate=0.2, delay_s=0.003),
+             ], seed=12)),
+        dict(name="device_nan", retry=True,
+             gold_plan=FaultPlan([FaultSpec("nan", rate=0.2, at=(1,))],
+                                 seed=13)),
+        dict(name="hang_watchdog", watchdog=0.25,
+             gold_plan=FaultPlan([FaultSpec("hang", at=(2,))], seed=14)),
+        dict(name="baseline", recover=True, watchdog=2.0,
+             gold_plan=FaultPlan([
+                 FaultSpec("device", rate=0.01),
+                 FaultSpec("device", at=burst_idx),
+             ], seed=15)),
+    ]
+
+
+def collect(smoke: bool = False) -> Dict:
+    g, cfg, params, nai = _setup(smoke)
+    payload: Dict = {
+        "impl": IMPL, "smoke": bool(smoke),
+        "batch_size": nai.batch_size,
+        "budget_s": BUDGET_S, "min_goodput_ratio": MIN_GOODPUT_RATIO,
+        "structural": _parity_fault_free(g, cfg, params, nai, smoke),
+        "scenarios": {},
+    }
+    for sc in _scenarios(smoke):
+        kw = dict(sc)
+        name = kw.pop("name")
+        payload["scenarios"][name] = _run_scenario(
+            name, g, cfg, params, nai, smoke, **kw)
+        print(f"# scenario {name}: "
+              f"goodput={payload['scenarios'][name]['goodput_frac']:.3f} "
+              f"failed={payload['scenarios'][name]['totals']['failed']} "
+              f"wall={payload['scenarios'][name]['wall_s']}s",
+              flush=True)
+    clean = payload["scenarios"]["clean"]["goodput_frac"]
+    base = payload["scenarios"]["baseline"]["goodput_frac"]
+    payload["goodput_gate"] = {
+        "clean": clean, "baseline": base,
+        "ratio": base / max(clean, 1e-9),
+        "min_ratio": MIN_GOODPUT_RATIO,
+    }
+    return payload
+
+
+# ------------------------------------------------------------- gating
+def check(payload: Dict) -> List[str]:
+    errs: List[str] = []
+    st = payload["structural"]
+    if not st["parity_fault_free"]:
+        errs.append("fault-free wired front-end diverged from the plain "
+                    "one (predictions/exit orders)")
+    if st["wired_failed"] or st["wired_degraded"]:
+        errs.append(f"fault-free run recorded failed="
+                    f"{st['wired_failed']} degraded="
+                    f"{st['wired_degraded']}")
+    if st["breaker_transitions"]:
+        errs.append(f"fault-free run recorded "
+                    f"{st['breaker_transitions']} breaker transitions")
+    errs += [f"structural: {e}" for e in st["conservation_errors"]]
+
+    for name, sc in payload["scenarios"].items():
+        if sc["deadlock"]:
+            errs.append(f"{name}: pipeline deadlocked (requests pending "
+                        f"after the bounded drain)")
+        errs += [f"{name}: {e}" for e in sc["conservation_errors"]]
+        if name != "clean" and not any(
+                v.get("fired", 0)
+                for inj in sc["injectors"].values()
+                for v in inj.values()):
+            errs.append(f"{name}: no fault ever fired — the scenario "
+                        f"exercised nothing")
+
+    sc = payload["scenarios"]
+    if sc["clean"]["totals"]["failed"]:
+        errs.append(f"clean: {sc['clean']['totals']['failed']} failed "
+                    f"requests without any injected fault")
+    if not sc["store_io"]["totals"]["retried"] \
+            and not sc["store_io"]["totals"]["failed"]:
+        errs.append("store_io: injected read failures neither retried "
+                    "nor failed any request")
+    if not sc["host_crash"]["totals"]["failed"]:
+        errs.append("host_crash: injected host exceptions failed no "
+                    "requests")
+    nan = sc["device_nan"]
+    if not nan["totals"]["retried"] and not nan["totals"]["failed"]:
+        errs.append("device_nan: poisoned batches neither retried nor "
+                    "failed (NaN reached completed requests?)")
+    hang = sc["hang_watchdog"]
+    if not hang["totals"]["failed"]:
+        errs.append("hang_watchdog: the hung batch was not failed by "
+                    "the watchdog")
+    if not hang["totals"]["completed"]:
+        errs.append("hang_watchdog: nothing completed after the hang — "
+                    "the pipeline did not re-arm")
+
+    base = sc["baseline"]
+    kinds = [(a, b) for _, a, b in base["breaker"]["transitions"]]
+    if base["breaker"]["trips"] < 1 or ("closed", "open") not in kinds:
+        errs.append("baseline: the burst window never tripped the "
+                    "breaker")
+    if base["breaker"]["state"] != "closed" \
+            or ("half_open", "closed") not in kinds:
+        errs.append(f"baseline: breaker did not recover to closed "
+                    f"(state={base['breaker']['state']}, "
+                    f"transitions={kinds})")
+    gate = payload["goodput_gate"]
+    if gate["ratio"] < gate["min_ratio"]:
+        errs.append(f"baseline goodput {gate['baseline']:.3f} fell "
+                    f"below {gate['min_ratio']} of clean "
+                    f"{gate['clean']:.3f}")
+    return errs
+
+
+def _rows(payload: Dict) -> List[str]:
+    rows = []
+    for name, sc in payload["scenarios"].items():
+        t = sc["totals"]
+        derived = (f"goodput_frac={sc['goodput_frac']:.4f};"
+                   f"offered={t['offered']};completed={t['completed']};"
+                   f"failed={t['failed']};rejected={t['rejected']};"
+                   f"retried={t['retried']};degraded={t['degraded']};"
+                   f"trips={sc['breaker']['trips']};"
+                   f"deadlock={sc['deadlock']}")
+        rows.append(csv_row(f"chaos/{name}", 1e6 * sc["wall_s"], derived))
+    st = payload["structural"]
+    rows.append(csv_row(
+        "chaos/structural", 0.0,
+        f"parity_fault_free={st['parity_fault_free']};"
+        f"trace_requests={st['trace_requests']};"
+        f"breaker_transitions={st['breaker_transitions']}"))
+    return rows
+
+
+def run() -> list:
+    return _rows(collect(smoke=True))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / short runs (CI smoke job)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero on a conservation/parity/goodput/"
+                         "breaker gate failure")
+    ap.add_argument("--out", default="",
+                    help="JSON output path (default: merge under the "
+                         "'chaos' key of BENCH_serving.json; with "
+                         "--smoke, standalone BENCH_chaos_smoke.json)")
+    args = ap.parse_args()
+    payload = collect(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for r in _rows(payload):
+        print(r, flush=True)
+    if args.out:
+        out_path, merge = args.out, args.out == "BENCH_serving.json"
+    elif args.smoke:
+        out_path, merge = "BENCH_chaos_smoke.json", False
+    else:
+        out_path, merge = "BENCH_serving.json", True
+    if merge and os.path.exists(out_path):
+        with open(out_path) as fh:
+            doc = json.load(fh)
+        doc["chaos"] = payload
+    else:
+        doc = payload
+    with open(out_path, "w") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
+    print(f"# wrote {out_path}")
+    if args.check:
+        errs = check(payload)
+        for e in errs:
+            print(f"CHECK FAIL: {e}", file=sys.stderr)
+        if errs:
+            sys.exit(1)
+        print("# all chaos gates passed")
+
+
+if __name__ == "__main__":
+    main()

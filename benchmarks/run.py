@@ -18,7 +18,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: table3,table5,table6,table7,fig2,fig3,"
                          "roofline,kernels,ablation,serving,"
-                         "serving_sharded,frontend")
+                         "serving_sharded,frontend,chaos")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -67,6 +67,9 @@ def main() -> None:
     if only is None or "frontend" in only:
         from benchmarks.frontend_bench import run as fb
         suites.append(("frontend", fb))
+    if only is None or "chaos" in only:
+        from benchmarks.chaos_bench import run as cb
+        suites.append(("chaos", cb))
 
     print("name,us_per_call,derived")
     failures = 0

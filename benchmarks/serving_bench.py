@@ -384,6 +384,8 @@ def _graph_scale(smoke: bool, store_dir: str = "") -> Dict:
                 p_m, o_m = _serve_collect(eng, stream)
                 p_r, o_r = _serve_collect(ram, stream)
                 section["store_parity"] = bool(p_m == p_r and o_m == o_r)
+                ram.close()
+            eng.close()           # releases the store's fd/maps too
     finally:
         if tmp is not None:
             tmp.cleanup()
@@ -668,14 +670,16 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in _rows(payload):
         print(r, flush=True)
-    # frontend_bench merges its section into this file; carry it across
-    # rewrites so regenerating the serving record never drops it
+    # frontend_bench and chaos_bench merge their sections into this
+    # file; carry them across rewrites so regenerating the serving
+    # record never drops them
     if os.path.exists(out_path):
         try:
             with open(out_path) as fh:
                 prev = json.load(fh)
-            if "frontend" in prev:
-                payload["frontend"] = prev["frontend"]
+            for key in ("frontend", "chaos"):
+                if key in prev:
+                    payload[key] = prev[key]
         except (json.JSONDecodeError, OSError):
             pass
     with open(out_path, "w") as fh:

@@ -64,8 +64,10 @@ from __future__ import annotations
 import json
 import mmap as _mmap
 import os
+import time
 import warnings
-from typing import Optional, Tuple
+import zlib
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -79,6 +81,50 @@ from repro.gnn.graph import Graph
 FORMAT = "repro-graphstore-v1"
 
 _ARRAYS = ("row_ptr", "col_idx", "features", "degrees", "labels")
+
+
+class StoreError(Exception):
+    """Base class for typed storage failures. Catching this (rather than
+    bare IOError/ValueError) is how upstream layers distinguish "the
+    storage tier failed" from their own bugs."""
+
+
+class StoreIOError(StoreError, OSError):
+    """A read against the backing files failed (short read / OS error)
+    and did not recover within the bounded retry budget. Transient by
+    nature — the engine may retry the batch on another path."""
+
+
+class StoreCorruption(StoreError, ValueError):
+    """The bytes on disk do not match the build-time metadata (checksum
+    or shape mismatch). NOT transient: retrying the same store cannot
+    help, the store must be rebuilt."""
+
+
+def _file_crc32(path: str, chunk: int = 8 << 20) -> str:
+    """crc32 of a whole file, chunked so graph-scale arrays never
+    materialize in RAM. Hex string, zero-padded (JSON-friendly)."""
+    crc = 0
+    with open(path, "rb") as fh:
+        while True:
+            buf = fh.read(chunk)
+            if not buf:
+                break
+            crc = zlib.crc32(buf, crc)
+    return f"{crc & 0xFFFFFFFF:08x}"
+
+
+def _store_checksums(path: str) -> Dict[str, str]:
+    """Checksums of every array file present in a store directory,
+    computed at BUILD time and persisted in meta.json — verification at
+    open/demand compares against these, so corruption is detected as a
+    typed error instead of surfacing as garbage predictions."""
+    out = {}
+    for key in _ARRAYS:
+        p = os.path.join(path, f"{key}.npy")
+        if os.path.exists(p):
+            out[f"{key}.npy"] = _file_crc32(p)
+    return out
 
 
 class GraphStore:
@@ -150,6 +196,20 @@ class GraphStore:
         """Release any resident file-backed pages (no-op for in-RAM
         stores). Returns the estimated bytes released."""
         return 0
+
+    # -- lifecycle: stores are context managers so fds/maps are released
+    # deterministically (engines and benches call close(); __del__ on
+    # file-backed stores is only a backstop)
+    def close(self) -> None:
+        """Release OS resources held by the store. No-op for in-RAM
+        stores; idempotent everywhere."""
+
+    def __enter__(self) -> "GraphStore":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     def __len__(self) -> int:
         return self.n
@@ -231,13 +291,18 @@ class MmapStore(GraphStore):
       views can't creep toward file size over a long serving run."""
 
     def __init__(self, path: str, *, mmap: bool = True,
-                 resident_budget: int = 128 << 20):
+                 resident_budget: int = 128 << 20,
+                 verify: bool = False, io_retries: int = 2,
+                 io_backoff_s: float = 0.005):
         self.path = os.fspath(path)
         self._mmap_mode = "r" if mmap else None
         self.resident_budget = int(resident_budget)
+        self.io_retries = int(io_retries)
+        self.io_backoff_s = float(io_backoff_s)
         self._touched_est = 0
         self._feat_fd = -1
         self._feat_off = 0
+        self._closed = False
         meta_path = os.path.join(self.path, "meta.json")
         with open(meta_path) as fh:
             meta = json.load(fh)
@@ -252,8 +317,52 @@ class MmapStore(GraphStore):
         self.num_edges = int(meta["num_edges"])
         self.num_self_loops = int(meta["num_self_loops"])
         self._views = {}
+        if verify:
+            self.verify()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise ValueError(f"MmapStore({self.path!r}) is closed")
+
+    def verify(self, arrays: Optional[Tuple[str, ...]] = None) -> List[str]:
+        """Recompute file checksums and compare against the build-time
+        values in meta.json. Raises `StoreCorruption` on the first
+        mismatch; returns the list of array names actually verified
+        (arrays without a recorded checksum — pre-checksum stores — are
+        skipped, so old store dirs stay readable)."""
+        self._check_open()
+        recorded = self.meta.get("checksums", {})
+        verified = []
+        for key in (arrays if arrays is not None else _ARRAYS):
+            fname = f"{key}.npy"
+            want = recorded.get(fname)
+            p = os.path.join(self.path, fname)
+            if want is None or not os.path.exists(p):
+                continue
+            got = _file_crc32(p)
+            if got != want:
+                raise StoreCorruption(
+                    f"{p}: checksum mismatch (stored {want}, file {got})"
+                    f" — store is corrupt, rebuild it")
+            verified.append(key)
+        return verified
+
+    def _expected_shape(self, key: str) -> Optional[Tuple[int, ...]]:
+        """Build-time shape of an array view, from meta.json scalars —
+        a cheap corruption check that needs no file reads beyond the
+        .npy header (col_idx length comes from row_ptr's last slot)."""
+        if key == "row_ptr":
+            return (self.n + 1,)
+        if key == "features":
+            return (self.n, self.feat_dim)
+        if key in ("degrees", "labels"):
+            return (self.n,)
+        if key == "col_idx":
+            return (int(self._load("row_ptr")[-1]),)
+        return None
 
     def _load(self, key: str) -> Optional[np.ndarray]:
+        self._check_open()
         if key not in self._views:
             p = os.path.join(self.path, f"{key}.npy")
             if not os.path.exists(p):
@@ -262,17 +371,24 @@ class MmapStore(GraphStore):
                     return None
                 raise FileNotFoundError(f"store {self.path} missing {p}")
             arr = np.load(p, mmap_mode=self._mmap_mode)
+            self._views[key] = arr
+            want = self._expected_shape(key)
+            if want is not None and tuple(arr.shape) != want:
+                del self._views[key]
+                raise StoreCorruption(
+                    f"{p}: shape {tuple(arr.shape)} does not match "
+                    f"meta.json (expected {want}) — store is corrupt")
             if _HAVE_MADVISE:
                 mm = getattr(arr, "_mmap", None)
                 if mm is not None:
                     # random-access views: don't let a cold fault pull a
                     # ~128 KB readahead cluster per touched row
                     mm.madvise(_mmap.MADV_RANDOM)
-            self._views[key] = arr
         return self._views[key]
 
     def _feat_file(self) -> Tuple[int, int]:
         """(fd, data offset) of features.npy for pread-based gathers."""
+        self._check_open()
         if self._feat_fd < 0:
             p = os.path.join(self.path, "features.npy")
             nbytes = self.n * self.feat_dim * 4
@@ -298,18 +414,43 @@ class MmapStore(GraphStore):
         k = len(nodes)
         bounds = np.nonzero(np.diff(nodes) != 1)[0] + 1
         edges = np.concatenate(([0], bounds, [k]))
-        preadv = os.preadv
         for b in range(len(edges) - 1):
             i, j = int(edges[b]), int(edges[b + 1])
-            want = (j - i) * row
-            if preadv(fd, [flat[i * row:j * row]],
-                      base + int(nodes[i]) * row) != want:
-                raise IOError(f"{self.path}/features.npy: short read at "
-                              f"row {int(nodes[i])}")
+            self._pread_full(fd, flat[i * row:j * row],
+                             base + int(nodes[i]) * row, int(nodes[i]))
         self._touched_est += k * row
         if self._touched_est >= self.resident_budget:
             self.drop_resident()
         return out
+
+    def _pread_full(self, fd: int, view, offset: int, first_row: int) -> None:
+        """Fill `view` from `offset`, retrying transient short reads /
+        EINTR-class OS errors with bounded exponential backoff. A read
+        that still cannot complete raises a typed `StoreIOError` — the
+        caller (engine) treats that as a batch-level failure, not a
+        process-level one."""
+        want = len(view)
+        got = 0
+        attempts = self.io_retries
+        backoff = self.io_backoff_s
+        last_err: Optional[OSError] = None
+        while True:
+            try:
+                nread = os.preadv(fd, [view[got:]], offset + got)
+            except OSError as e:
+                nread, last_err = 0, e
+            if nread > 0:
+                got += nread
+            if got >= want:
+                return
+            if attempts <= 0:
+                raise StoreIOError(
+                    f"{self.path}/features.npy: short read at row "
+                    f"{first_row} ({got}/{want} bytes) after "
+                    f"{self.io_retries} retries") from last_err
+            attempts -= 1
+            time.sleep(backoff)
+            backoff *= 2.0
 
     def drop_resident(self) -> int:
         """Drop the mapped views' resident pages back to the page cache
@@ -325,13 +466,30 @@ class MmapStore(GraphStore):
                 mm.madvise(_mmap.MADV_DONTNEED)
         return est
 
-    def __del__(self):
+    def close(self) -> None:
+        """Close the feature fd and drop the mapped views. Idempotent;
+        any later array access raises (the store is not reopenable).
+        Engines and benches call this deterministically — `__del__` is
+        only the GC backstop for stores that escape a `with` block."""
+        if getattr(self, "_closed", False):
+            return
+        self._closed = True
         fd = getattr(self, "_feat_fd", -1)
+        self._feat_fd = -1
         if fd >= 0:
             try:
                 os.close(fd)
             except OSError:
                 pass
+        # dropping our references unmaps the views once no caller holds
+        # one; live external views stay valid (mmap refcounts the map)
+        self._views.clear()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
 
     @property
     def row_ptr(self) -> np.ndarray:
@@ -399,7 +557,8 @@ def save_graph_store(g: Graph, path: str) -> str:
             "feat_dim": int(g.features.shape[1]),
             "num_classes": int(g.num_classes),
             "num_edges": int(g.num_edges),
-            "num_self_loops": int(g.num_self_loops)}
+            "num_self_loops": int(g.num_self_loops),
+            "checksums": _store_checksums(path)}
     with open(os.path.join(path, "meta.json"), "w") as fh:
         json.dump(meta, fh, indent=1)
         fh.write("\n")
@@ -524,7 +683,8 @@ def make_graph(n: int, avg_deg: float = 16.0, alpha: float = 2.2,
             "feat_dim": int(feat_dim), "num_classes": int(num_classes),
             "num_edges": int(num_edges), "num_self_loops": int(n),
             "generator": {"avg_deg": float(avg_deg), "alpha": float(alpha),
-                          "seed": int(seed), "max_deg": int(max_deg)}}
+                          "seed": int(seed), "max_deg": int(max_deg)},
+            "checksums": _store_checksums(path)}
     with open(os.path.join(path, "meta.json"), "w") as fh:
         json.dump(meta, fh, indent=1)
         fh.write("\n")

@@ -1,9 +1,16 @@
 from repro.serving.engine import (EngineConfig, EngineStats,
                                   NAIServingEngine, Request)
-from repro.serving.frontend import (ClassStats, ServingFrontend, SLOClass,
+from repro.serving.faults import (FaultPlan, FaultSpec, FaultyStore,
+                                  InjectedFault, NaNGuardError,
+                                  WatchdogTimeout)
+from repro.serving.frontend import (BreakerConfig, CircuitBreaker,
+                                    ClassStats, ServingFrontend, SLOClass,
                                     default_slo_classes)
 from repro.serving.lm_engine import LMRequest, LMServingEngine
 
 __all__ = ["EngineConfig", "EngineStats", "NAIServingEngine", "Request",
+           "FaultPlan", "FaultSpec", "FaultyStore", "InjectedFault",
+           "NaNGuardError", "WatchdogTimeout",
+           "BreakerConfig", "CircuitBreaker",
            "ClassStats", "ServingFrontend", "SLOClass",
            "default_slo_classes", "LMRequest", "LMServingEngine"]

@@ -110,6 +110,8 @@ from repro.gnn.packing import (CB, PackedSupport, batch_bucket,
                                pack_support, step_active_blocks)
 from repro.gnn.sampler import sample_support
 from repro.gnn.store import as_store
+from repro.serving.faults import (InjectedFault, NaNGuardError,
+                                  WatchdogTimeout, poison_results)
 from repro.sharding.logical import spec
 
 
@@ -134,6 +136,11 @@ class EngineConfig:
     donate: Optional[bool] = None    # operand donation (None = backend)
     latency_window: int = 4096       # LatencyRing capacity
     mesh: object = None              # mesh with a "data" axis, or None
+    # --- failure-domain isolation (all default off / no-op) ---
+    faults: object = None            # FaultPlan schedule, or None
+    watchdog_s: Optional[float] = None   # device-sync deadline, None = off
+    retry_failed: bool = False       # retry a failed batch once (host path)
+    nan_guard: bool = True           # finite/range check on synced results
 
     def __post_init__(self):
         if self.mode not in ("host", "compiled"):
@@ -159,6 +166,13 @@ class EngineConfig:
         if self.latency_window < 1:
             raise ValueError(f"latency_window must be >= 1, got "
                              f"{self.latency_window}")
+        if self.watchdog_s is not None and self.watchdog_s <= 0:
+            raise ValueError(f"watchdog_s must be > 0 (or None to "
+                             f"disable), got {self.watchdog_s}")
+        if self.faults is not None and not callable(
+                getattr(self.faults, "injector", None)):
+            raise ValueError("faults must be a FaultPlan "
+                             "(repro.serving.faults) or None")
 
 
 @dataclasses.dataclass
@@ -171,6 +185,14 @@ class Request:
     prediction: int = -1
     exit_order: int = -1
     batch_id: int = -1                 # engine batch this completed in
+    # terminal lifecycle: every accepted request ends EXACTLY once as
+    # "completed" or "failed" (shedding happens before acceptance, at
+    # the front-end) — the conservation invariant chaos_bench gates
+    status: str = "pending"            # "pending" | "completed" | "failed"
+    error: str = ""                    # typed failure cause when failed
+    retried: bool = False              # recovered via the reference path
+    degraded: bool = False             # demoted by an open circuit breaker
+    probe: bool = False                # half-open breaker probe request
 
     @property
     def within_deadline(self) -> bool:
@@ -217,6 +239,8 @@ class LatencyRing:
 class EngineStats:
     served: int = 0
     batches: int = 0
+    failed: int = 0        # requests that ended status="failed"
+    retried: int = 0       # requests recovered on the reference path
     latencies: LatencyRing = dataclasses.field(default_factory=LatencyRing)
     exit_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
 
@@ -228,6 +252,8 @@ class EngineStats:
         return {
             "served": self.served,
             "batches": self.batches,
+            "failed": self.failed,
+            "retried": self.retried,
             "p50_ms": 1e3 * self.percentile(50),
             "p95_ms": 1e3 * self.percentile(95),
             "p99_ms": 1e3 * self.percentile(99),
@@ -247,6 +273,7 @@ class _Inflight:
     orders_dev: object
     host_s: float            # sample + pack wall time
     dispatch_s: float        # operand transfer + async dispatch wall time
+    t_submit: float = 0.0    # wall clock at dispatch (watchdog anchor)
 
 
 class NAIServingEngine:
@@ -287,6 +314,12 @@ class NAIServingEngine:
         self.pipeline_depth = pipeline_depth
         self.queue: Deque[Request] = deque()
         self.stats = EngineStats(latencies=LatencyRing(ec.latency_window))
+        # failure-domain isolation knobs (EngineConfig, all off by default)
+        self.watchdog_s = ec.watchdog_s
+        self.retry_failed = ec.retry_failed
+        self.nan_guard = ec.nan_guard
+        self._faults = (ec.faults.injector()
+                        if ec.faults is not None else None)
         # compiled-path state: jitted runner + bucket high-water marks
         # keyed by padded batch size
         # -> (s_bucket, tb_bucket, e_bucket, h_bucket, hb_bucket)
@@ -328,6 +361,18 @@ class NAIServingEngine:
     def jit_cache_size(self) -> int:
         """Shapes traced by the compiled runner (0 in host mode)."""
         return self._runner._cache_size() if self._runner is not None else 0
+
+    @property
+    def fault_stats(self) -> Optional[Dict]:
+        """Per-stage injected-fault tallies (None without a FaultPlan)."""
+        return self._faults.summary() if self._faults is not None else None
+
+    def close(self) -> None:
+        """Drain in-flight work, then release the store's OS resources
+        (fd/maps for `MmapStore`). Idempotent — front-ends sharing one
+        store across per-class engines close it once per engine."""
+        self.flush()
+        self.store.close()
 
     @property
     def donate_argnums(self) -> tuple:
@@ -438,14 +483,102 @@ class NAIServingEngine:
             x_inf = jnp.asarray(packed.x_inf)
         return self._runner(self._cls_params, operands, x0, x_inf)
 
+    def _watchdog_sync(self, fl: _Inflight) -> None:
+        """Bound the device sync: poll `is_ready` until the results are
+        complete or `watchdog_s` has elapsed since dispatch, then raise
+        `WatchdogTimeout` — the batch is declared hung and failed, and
+        the pipeline slot it held is free again (re-armed). With the
+        watchdog off (None) this returns immediately and the sync
+        blocks, exactly the pre-watchdog behavior."""
+        wd = self.watchdog_s
+        if wd is None:
+            return
+        deadline = fl.t_submit + wd
+        for dev in (fl.preds_dev, fl.orders_dev):
+            ready = getattr(dev, "is_ready", None)
+            if ready is None:
+                continue
+            while not ready():
+                if time.perf_counter() >= deadline:
+                    raise WatchdogTimeout(
+                        f"device sync not ready {wd * 1e3:.0f} ms after "
+                        f"dispatch; batch of {len(fl.requests)} declared "
+                        f"hung")
+                time.sleep(1e-4)
+
+    def _guard_results(self, preds: np.ndarray, orders: np.ndarray,
+                       nb_real: int) -> None:
+        """Fail the batch if the device returned garbage: non-finite
+        values (NaN/Inf logits surviving to the argmax) or out-of-range
+        class ids / exit orders. Guards VALUES only — a passing batch's
+        results are byte-identical to the unguarded path."""
+        if not self.nan_guard:
+            return
+        p, o = preds[:nb_real], orders[:nb_real]
+        for what, a in (("predictions", p), ("exit orders", o)):
+            if a.dtype.kind == "f" and not np.all(np.isfinite(a)):
+                raise NaNGuardError(
+                    f"non-finite {what} from the device stage")
+        if p.size:
+            lo, hi = int(p.min()), int(p.max())
+            if lo < 0 or hi >= self.cfg.num_classes:
+                raise NaNGuardError(
+                    f"prediction ids [{lo}, {hi}] outside "
+                    f"[0, {self.cfg.num_classes})")
+            olo, ohi = int(o.min()), int(o.max())
+            if olo < 1 or ohi > self.nai.t_max:
+                raise NaNGuardError(
+                    f"exit orders [{olo}, {ohi}] outside "
+                    f"[1, {self.nai.t_max}]")
+
+    def _fail_batch(self, batch: List[Request], err: Exception
+                    ) -> List[Request]:
+        """Terminal handling for a batch whose stage raised: the failure
+        domain is THIS batch only — nothing here touches the queue, the
+        pipeline, or other in-flight batches. With `retry_failed` the
+        batch gets one graceful-degradation attempt on the reference
+        host path (`infer_batch_host`, the numpy `segment` semantics —
+        always available, never compiled) before being declared failed."""
+        if self.retry_failed and not any(r.retried for r in batch):
+            for r in batch:
+                r.retried = True
+            try:
+                nodes = np.asarray([r.node_id for r in batch])
+                uniq, inv = np.unique(nodes, return_inverse=True)
+                p_u, o_u, _, _, _ = infer_batch_host(
+                    self.cfg, self.nai, self.params, self.store, uniq)
+            except Exception as retry_err:   # noqa: BLE001 — isolation
+                err = retry_err
+            else:
+                self.stats.retried += len(batch)
+                self._complete(batch, p_u[inv], o_u[inv],
+                               time.perf_counter())
+                return batch
+        msg = f"{type(err).__name__}: {err}"
+        for r in batch:
+            r.status = "failed"
+            r.error = msg
+            r.done_s = time.perf_counter()
+        self.stats.failed += len(batch)
+        return batch
+
     def _finalize_oldest(self) -> List[Request]:
-        """Sync the oldest in-flight batch (block on its device results)
-        and complete its requests. FIFO, so completion order matches
-        submission order regardless of pipeline depth."""
+        """Sync the oldest in-flight batch (block on its device results,
+        bounded by the watchdog when armed) and complete its requests.
+        FIFO, so completion order matches submission order regardless of
+        pipeline depth. A sync failure, watchdog trip, or guard trip
+        fails ONLY this batch — the slot is released either way."""
         fl = self._inflight.popleft()
         t0 = time.perf_counter()
-        preds = np.asarray(fl.preds_dev)[:fl.nb_real][fl.inv]
-        orders = np.asarray(fl.orders_dev)[:fl.nb_real][fl.inv]
+        try:
+            self._watchdog_sync(fl)
+            preds_a = np.asarray(fl.preds_dev)
+            orders_a = np.asarray(fl.orders_dev)
+            self._guard_results(preds_a, orders_a, fl.nb_real)
+        except Exception as e:   # noqa: BLE001 — batch-level isolation
+            return self._fail_batch(fl.requests, e)
+        preds = preds_a[:fl.nb_real][fl.inv]
+        orders = orders_a[:fl.nb_real][fl.inv]
         done = time.perf_counter()
         self.batch_timings.append({
             "host_s": fl.host_s, "dispatch_s": fl.dispatch_s,
@@ -461,20 +594,38 @@ class NAIServingEngine:
             r.prediction = int(p)
             r.exit_order = int(o)
             r.batch_id = bid
+            r.status = "completed"
             self.stats.latencies.append(done - r.arrival_s)
             self.stats.exit_hist[int(o)] = \
                 self.stats.exit_hist.get(int(o), 0) + 1
         self.stats.served += len(batch)
         self.stats.batches += 1
 
+    def _validate_node_id(self, node_id) -> int:
+        """Reject an out-of-range id at SUBMIT time with a clear error.
+        Unvalidated, a bad id fails deep in the sampler with an opaque
+        index error — and takes its whole batch down with it."""
+        nid = int(node_id)
+        if not 0 <= nid < self.store.n:
+            raise ValueError(
+                f"node id {nid} out of range for store "
+                f"{self.store.name!r} with n={self.store.n} nodes "
+                f"(valid ids are 0..{self.store.n - 1})")
+        return nid
+
     def submit(self, node_ids, now: Optional[float] = None) -> None:
         now = time.perf_counter() if now is None else now
-        for nid in np.atleast_1d(node_ids):
-            self.queue.append(Request(int(nid), now))
+        # validate the whole call before enqueuing any of it, so a bad
+        # id rejects atomically instead of half-submitting
+        nids = [self._validate_node_id(nid)
+                for nid in np.atleast_1d(node_ids)]
+        for nid in nids:
+            self.queue.append(Request(nid, now))
 
     def submit_request(self, req: Request) -> None:
         """Enqueue a pre-built request (the front-end path: deadline and
         SLO class already stamped by `repro.serving.frontend`)."""
+        self._validate_node_id(req.node_id)
         self.queue.append(req)
 
     def form_batch(self, now: Optional[float] = None, *,
@@ -522,12 +673,38 @@ class NAIServingEngine:
             done += self._finalize_oldest()
         if opportunistic:
             while self._inflight:
+                # no is_ready attribute means the results are already
+                # host-materialized (plain arrays), i.e. trivially ready
+                # — treating that as NOT ready parks the batch below
+                # pipeline_depth where poll() can never finalize it
                 ready = getattr(self._inflight[0].preds_dev,
                                 "is_ready", None)
-                if ready is None or not ready():
+                if ready is not None and not ready():
                     break
                 done += self._finalize_oldest()
+        # watchdog re-arm: a hung head batch must not wedge open-loop
+        # serving (poll never blocks, so without this check a
+        # never-ready future parks below pipeline_depth forever) —
+        # finalize it now; _watchdog_sync declares it failed immediately
+        # since its deadline has already passed
+        if self.watchdog_s is not None:
+            while (self._inflight
+                   and time.perf_counter() - self._inflight[0].t_submit
+                   >= self.watchdog_s):
+                done += self._finalize_oldest()
         return done
+
+    def _inject_host_faults(self) -> None:
+        """Host-stage injection point (`slow` then `host`); called once
+        per served batch so a plan's event counters align with batch
+        indices. No-op without a FaultPlan."""
+        if self._faults is None:
+            return
+        spec = self._faults.fire("slow")
+        if spec is not None and spec.delay_s > 0.0:
+            time.sleep(spec.delay_s)
+        if self._faults.fire("host") is not None:
+            raise InjectedFault("injected host-stage failure")
 
     def _serve_batch(self, batch: List[Request]) -> List[Request]:
         nodes = np.asarray([r.node_id for r in batch])
@@ -536,18 +713,34 @@ class NAIServingEngine:
         # the stationary state and skew every exit distance
         uniq, inv = np.unique(nodes, return_inverse=True)
         if self.mode == "host":
-            p_u, o_u, _, _, _ = infer_batch_host(
-                self.cfg, self.nai, self.params, self.store, uniq)
+            try:
+                self._inject_host_faults()
+                p_u, o_u, _, _, _ = infer_batch_host(
+                    self.cfg, self.nai, self.params, self.store, uniq)
+            except Exception as e:   # noqa: BLE001 — batch isolation
+                return self._fail_batch(batch, e)
             self._complete(batch, p_u[inv], o_u[inv], time.perf_counter())
             return batch
         t0 = time.perf_counter()
-        packed, step_active = self._host_stage(uniq)
-        t1 = time.perf_counter()
-        preds_dev, orders_dev = self._device_stage(packed, step_active)
+        try:
+            self._inject_host_faults()
+            packed, step_active = self._host_stage(uniq)
+            t1 = time.perf_counter()
+            if (self._faults is not None
+                    and self._faults.fire("device") is not None):
+                raise InjectedFault("injected device-stage failure")
+            preds_dev, orders_dev = self._device_stage(packed, step_active)
+            preds_dev, orders_dev = poison_results(self._faults,
+                                                   preds_dev, orders_dev)
+        except Exception as e:   # noqa: BLE001 — batch-level isolation:
+            # a stage failure takes down THIS batch only; in-flight
+            # batches and the queue are untouched, and _advance keeps
+            # the pipeline moving
+            return self._fail_batch(batch, e) + self._advance()
         t2 = time.perf_counter()
         self._inflight.append(
             _Inflight(batch, inv, packed.nb_real, preds_dev, orders_dev,
-                      host_s=t1 - t0, dispatch_s=t2 - t1))
+                      host_s=t1 - t0, dispatch_s=t2 - t1, t_submit=t2))
         done: List[Request] = []
         while len(self._inflight) >= self.pipeline_depth:
             done += self._finalize_oldest()

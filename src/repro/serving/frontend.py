@@ -50,7 +50,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.gnn.nai import NAIConfig
 from repro.serving.engine import (EngineConfig, EngineStats, LatencyRing,
@@ -74,6 +75,7 @@ class SLOClass:
     max_wait_s: float            # close a partial batch at this age
     queue_depth: int = 256       # reject (shed) submits beyond this
     engine: Optional[EngineConfig] = None   # per-class engine override
+    demote_to: Optional[str] = None   # breaker-open fallback class
 
     def __post_init__(self):
         if not self.name:
@@ -102,7 +104,8 @@ def default_slo_classes(base: NAIConfig, *, gold_deadline_s: float = 0.5,
     qd = queue_depth if queue_depth is not None else 4 * base.batch_size
     return (
         SLOClass("gold", base, deadline_s=gold_deadline_s,
-                 max_wait_s=gold_max_wait_s, queue_depth=qd),
+                 max_wait_s=gold_max_wait_s, queue_depth=qd,
+                 demote_to="best_effort"),
         SLOClass("best_effort",
                  dataclasses.replace(base, t_max=base.t_min),
                  deadline_s=best_effort_deadline_s,
@@ -110,14 +113,125 @@ def default_slo_classes(base: NAIConfig, *, gold_deadline_s: float = 0.5,
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class BreakerConfig:
+    """Per-class circuit-breaker policy (shared by every class of a
+    front-end that installs one). The breaker watches TERMINAL outcomes
+    — failures, plus deadline misses when `count_misses` — over a
+    sliding window and trips when the bad fraction is sustained."""
+    window: int = 32             # sliding window of terminal outcomes
+    trip_frac: float = 0.5       # bad fraction that opens the breaker
+    min_events: int = 16         # don't trip on a near-empty window
+    cooldown_s: float = 1.0      # open -> half_open after this long
+    probes: int = 3              # half_open: successes needed to close
+    open_depth_frac: float = 0.5     # lane-depth scale while not closed
+    count_misses: bool = True    # deadline misses count as bad outcomes
+
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        if not 0.0 < self.trip_frac <= 1.0:
+            raise ValueError(f"trip_frac must be in (0, 1], got "
+                             f"{self.trip_frac}")
+        if not 1 <= self.min_events <= self.window:
+            raise ValueError(f"min_events must be in [1, window], got "
+                             f"{self.min_events}")
+        if self.cooldown_s <= 0:
+            raise ValueError(f"cooldown_s must be > 0, got "
+                             f"{self.cooldown_s}")
+        if self.probes < 1:
+            raise ValueError(f"probes must be >= 1, got {self.probes}")
+        if not 0.0 < self.open_depth_frac <= 1.0:
+            raise ValueError(f"open_depth_frac must be in (0, 1], got "
+                             f"{self.open_depth_frac}")
+
+
+class CircuitBreaker:
+    """closed -> open -> half_open -> closed, driven by terminal request
+    outcomes on one SLO class.
+
+    *closed*: all traffic routes natively; a sustained bad fraction
+    (`trip_frac` over the last `window` outcomes, at least `min_events`
+    of them) OPENS the breaker.
+    *open*: no native traffic — the front-end demotes to the class's
+    `demote_to` engine (already compiled at its T_min shape) or sheds,
+    and sheds earlier either way (`open_depth_frac` lane bound). After
+    `cooldown_s` the next routing decision moves to half_open.
+    *half_open*: up to `probes` requests route natively as probes; any
+    probe failing re-opens (fresh cooldown), `probes` successes close.
+
+    Transitions are recorded as ``(t, from, to)`` — the observable
+    chaos_bench gates on."""
+
+    def __init__(self, cfg: BreakerConfig):
+        self.cfg = cfg
+        self.state = "closed"
+        self.trips = 0
+        self.transitions: List[Tuple[float, str, str]] = []
+        self._events = deque(maxlen=cfg.window)
+        self._opened_at = 0.0
+        self._probes_out = 0
+        self._probe_ok = 0
+
+    def _to(self, state: str, now: float) -> None:
+        self.transitions.append((now, self.state, state))
+        self.state = state
+        if state == "open":
+            self.trips += 1
+            self._opened_at = now
+            self._probes_out = 0
+            self._probe_ok = 0
+            self._events.clear()
+        elif state == "closed":
+            self._events.clear()
+
+    def route(self, now: float) -> str:
+        """Routing decision for one submit: ``"native"`` | ``"probe"``
+        | ``"reroute"``. Also where open ages into half_open."""
+        if (self.state == "open"
+                and now - self._opened_at >= self.cfg.cooldown_s):
+            self._to("half_open", now)
+        if self.state == "closed":
+            return "native"
+        if (self.state == "half_open"
+                and self._probes_out < self.cfg.probes):
+            self._probes_out += 1
+            return "probe"
+        return "reroute"
+
+    def on_terminal(self, bad: bool, probe: bool, now: float) -> None:
+        """Feed one terminal outcome (completion, failure, or
+        deadline-scored completion) back into the state machine."""
+        if probe:
+            if self.state != "half_open":
+                return            # stale probe from before a transition
+            if bad:
+                self._to("open", now)
+                return
+            self._probe_ok += 1
+            if self._probe_ok >= self.cfg.probes:
+                self._to("closed", now)
+            return
+        if self.state != "closed":
+            return                # outcomes of pre-trip traffic draining
+        self._events.append(bool(bad))
+        if (len(self._events) >= self.cfg.min_events
+                and sum(self._events)
+                >= self.cfg.trip_frac * len(self._events)):
+            self._to("open", now)
+
+
 @dataclasses.dataclass
 class ClassStats:
     offered: int = 0          # every submit attempt
     accepted: int = 0         # made it past backpressure
-    rejected: int = 0         # shed at submit (lane full)
+    rejected: int = 0         # shed at submit (lane full / breaker open)
     completed: int = 0
     deadline_hits: int = 0    # completed within budget (goodput)
     deadline_misses: int = 0
+    failed: int = 0           # terminal status="failed" (batch fault)
+    retried: int = 0          # completed via the engine's reference path
+    degraded: int = 0         # accepted onto the demote_to engine
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -125,6 +239,8 @@ class ClassStats:
             "rejected": self.rejected, "completed": self.completed,
             "deadline_hits": self.deadline_hits,
             "deadline_misses": self.deadline_misses,
+            "failed": self.failed, "retried": self.retried,
+            "degraded": self.degraded,
             "goodput_frac": self.deadline_hits / max(self.offered, 1),
         }
 
@@ -144,6 +260,7 @@ class ServingFrontend:
     def __init__(self, cfg, params, graph,
                  classes: Sequence[SLOClass], *,
                  engine: Optional[EngineConfig] = None,
+                 breaker: Optional[BreakerConfig] = None,
                  mode: str = "compiled", pipeline_depth: int = 1,
                  latency_window: int = 4096, **engine_kwargs):
         if not classes:
@@ -151,6 +268,12 @@ class ServingFrontend:
         names = [c.name for c in classes]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate SLO class names: {names}")
+        for c in classes:
+            if c.demote_to is not None and (c.demote_to not in names
+                                            or c.demote_to == c.name):
+                raise ValueError(
+                    f"{c.name}: demote_to={c.demote_to!r} must name a "
+                    f"DIFFERENT class of this front-end ({names})")
         if engine is not None and engine_kwargs:
             raise ValueError(
                 f"pass either engine=EngineConfig(...) or engine kwargs, "
@@ -171,6 +294,12 @@ class ServingFrontend:
             for c in classes}
         self.stats: Dict[str, ClassStats] = {
             c.name: ClassStats() for c in classes}
+        # one breaker per class when a policy is installed (None keeps
+        # the pre-breaker routing byte-for-byte: no state, no draws)
+        self.breaker_config = breaker
+        self.breakers: Dict[str, CircuitBreaker] = (
+            {c.name: CircuitBreaker(breaker) for c in classes}
+            if breaker is not None else {})
 
     # ---------------------------------------------------------- ingress
     def submit(self, node_id: int, slo_class: Optional[str] = None,
@@ -186,55 +315,117 @@ class ServingFrontend:
             raise KeyError(f"unknown SLO class {name!r} "
                            f"(one of {sorted(self.classes)})")
         c, eng, st = self.classes[name], self.engines[name], self.stats[name]
+        # validate BEFORE any accounting: a malformed id is the caller's
+        # error (raised), not an offered-and-shed request
+        nid = eng._validate_node_id(node_id)
+        now = time.perf_counter() if now is None else now
         st.offered += 1
-        if len(eng.queue) >= c.queue_depth:
+        probe = degraded = False
+        depth = c.queue_depth
+        br = self.breakers.get(name)
+        if br is not None:
+            route = br.route(now)
+            if route == "probe":
+                probe = True
+            elif route == "reroute":
+                if c.demote_to is None:
+                    # nowhere to degrade to: the open breaker sheds
+                    st.rejected += 1
+                    return None
+                # demote onto the fallback engine (already compiled at
+                # its own — cheaper — shapes), with an earlier shed
+                # bound so a tripped class can't flood its fallback
+                eng = self.engines[c.demote_to]
+                depth = max(1, int(self.classes[c.demote_to].queue_depth
+                                   * br.cfg.open_depth_frac))
+                degraded = True
+        if len(eng.queue) >= depth:
             st.rejected += 1
             return None
-        now = time.perf_counter() if now is None else now
         budget = c.deadline_s if budget_s is None else budget_s
-        req = Request(int(node_id), now, deadline_s=now + budget,
-                      slo_class=name)
+        req = Request(nid, now, deadline_s=now + budget,
+                      slo_class=name, probe=probe, degraded=degraded)
         eng.submit_request(req)
         st.accepted += 1
+        if degraded:
+            st.degraded += 1
         return req
 
     # ----------------------------------------------------------- egress
-    def _account(self, completed: List[Request]) -> List[Request]:
-        for r in completed:
+    def _account(self, terminal: List[Request],
+                 now: Optional[float] = None) -> List[Request]:
+        """Score terminal requests into their ORIGIN class's stats
+        (demoted requests keep their class tag) and feed the outcomes to
+        that class's breaker."""
+        if terminal and now is None:
+            now = time.perf_counter()
+        for r in terminal:
             st = self.stats[r.slo_class]
-            st.completed += 1
-            if r.within_deadline:
-                st.deadline_hits += 1
+            if r.status == "failed":
+                st.failed += 1
+                bad = True
             else:
-                st.deadline_misses += 1
-        return completed
+                st.completed += 1
+                if r.retried:
+                    st.retried += 1
+                if r.within_deadline:
+                    st.deadline_hits += 1
+                    bad = False
+                else:
+                    st.deadline_misses += 1
+                    bad = self.breaker_config.count_misses \
+                        if self.breaker_config is not None else False
+            br = self.breakers.get(r.slo_class)
+            if br is not None:
+                br.on_terminal(bad, r.probe, now)
+        return terminal
 
     def step(self, now: Optional[float] = None) -> List[Request]:
         """Poll every class lane once: dispatch batches the former has
         closed (size or age), advance pipelines non-blockingly
-        otherwise. Returns newly completed requests across classes."""
+        otherwise. Returns newly terminal requests across classes."""
         done: List[Request] = []
         for eng in self.engines.values():
-            done += self._account(eng.poll(now))
+            done += self._account(eng.poll(now), now)
         return done
 
-    def flush(self) -> List[Request]:
+    def flush(self, now: Optional[float] = None) -> List[Request]:
         """Explicit drain: force-close every partial batch still queued,
         then sync every in-flight batch. The end-of-stream path — never
         called on the hot serving loop."""
         done: List[Request] = []
         for eng in self.engines.values():
             while eng.queue:
-                done += self._account(eng.step())
-            done += self._account(eng.flush())
+                done += self._account(eng.step(), now)
+            done += self._account(eng.flush(), now)
         return done
 
     # ------------------------------------------------------------ stats
     def pending(self) -> int:
-        """Requests accepted but not yet completed (queued + in flight)."""
+        """Requests accepted but not yet terminal (queued + in flight)."""
         return sum(len(eng.queue)
                    + sum(len(fl.requests) for fl in eng._inflight)
                    for eng in self.engines.values())
+
+    def pending_by_class(self) -> Dict[str, int]:
+        """Pending counts keyed by ORIGIN class (demoted requests sit in
+        their fallback engine but count against the class that accepted
+        them — the per-class conservation ledger chaos_bench gates:
+        offered == rejected + completed + failed + pending)."""
+        out = {name: 0 for name in self.classes}
+        for eng in self.engines.values():
+            for r in eng.queue:
+                out[r.slo_class] += 1
+            for fl in eng._inflight:
+                for r in fl.requests:
+                    out[r.slo_class] += 1
+        return out
+
+    def close(self) -> None:
+        """Drain every engine and release the (shared) store's OS
+        resources. Idempotent — store close is."""
+        for eng in self.engines.values():
+            eng.close()
 
     def reset_stats(self) -> None:
         """Zero the per-class counters and per-engine latency stats
@@ -258,5 +449,8 @@ class ServingFrontend:
                      p99_ms=es["p99_ms"], batches=es["batches"],
                      jit_compiles=eng.jit_stats["compiles"],
                      pack_allocs=eng.pack_stats["allocs"])
+            br = self.breakers.get(name)
+            if br is not None:
+                s.update(breaker_state=br.state, breaker_trips=br.trips)
             out[name] = s
         return out
