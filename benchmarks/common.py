@@ -55,3 +55,28 @@ def grid_search_ts(name: str, base_model: str = "sgc", t_max=None,
 
 def csv_row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def zipf_requests(ids: np.ndarray, n_requests: int, *,
+                  exponent: float = 1.0, seed: int = 0) -> np.ndarray:
+    """Seeded Zipf(`exponent`) request stream over `ids`.
+
+    Models real serving traffic locality (hub nodes land in nearly every
+    request window): a seeded permutation of `ids` assigns popularity
+    ranks, then requests are drawn i.i.d. with p(rank k) ∝ k^-exponent.
+    `exponent=0` degenerates to uniform traffic (the 0%-overlap control
+    the cache bench uses to bound overhead). Deterministic for a given
+    (ids, n_requests, exponent, seed) — the contract the cache bench's
+    cached-vs-cold parity comparison and the determinism test rely on.
+    """
+    ids = np.asarray(ids)
+    if ids.ndim != 1 or len(ids) == 0:
+        raise ValueError(f"ids must be a non-empty 1-D array, got shape "
+                         f"{ids.shape}")
+    if exponent < 0:
+        raise ValueError(f"exponent must be >= 0, got {exponent}")
+    rng = np.random.default_rng(seed)
+    ranked = rng.permutation(ids)
+    p = np.arange(1, len(ids) + 1, dtype=np.float64) ** -exponent
+    p /= p.sum()
+    return rng.choice(ranked, size=n_requests, p=p)

@@ -36,6 +36,21 @@ Sharded rows also carry the halo-exchange structural columns:
   path silently degenerated to the dense exchange) or a frame larger
   than the dense frontier.
 
+``--cache`` adds the propagated-feature-cache section (engine
+``cache_nodes=``; see README "Propagated-feature cache"): a seeded
+Zipf(1.0) request stream — hub nodes land in nearly every request
+window — served through cache-on vs cache-off engines. Cached serving
+must be BIT-IDENTICAL to cold (predictions and exit orders, the same
+gate the mutation and sharded rounds re-check after ``add_edges`` /
+``add_nodes`` and at D=2), while the row accounting shows the win:
+``rows_packed`` < ``rows_support`` (frontier rows served from cache are
+dropped from the packed SpMM). The 0%-hit control serves the same
+stream with ``cache_fill=False`` — every probe misses by construction,
+so the cache-on/cache-off req/s ratio bounds the probe+seed overhead
+deterministically (timing itself stays advisory, as everywhere else in
+this bench; the structural ``--check`` gates are hit_rate > 0, parity,
+and the zero-steady-state counters with the cache enabled).
+
 ``--graph-scale`` adds the store-scale sweep: synthetic power-law graphs
 (1e5 → 1e7 nodes full-size, one small size under ``--smoke``) are
 generated ON DISK in a subprocess (``python -m repro.gnn.store``) and
@@ -53,7 +68,7 @@ at the smallest size).
 Runnable standalone::
 
     PYTHONPATH=src python -m benchmarks.serving_bench [--smoke] [--check]
-                                                      [--sharded]
+                                                      [--sharded] [--cache]
                                                       [--graph-scale]
                                                       [--out F]
 
@@ -392,6 +407,168 @@ def _graph_scale(smoke: bool, store_dir: str = "") -> Dict:
     return section
 
 
+def _cache_stream(ids, bs: int, n_batches: int, exponent: float,
+                  seed: int) -> List[np.ndarray]:
+    """Zipf(`exponent`) request batches over `ids` (exponent=0 =
+    uniform). Batches may repeat nodes within and across batches — the
+    engine dedupes per batch; cross-batch repetition is what the cache
+    serves."""
+    from benchmarks.common import zipf_requests
+    flat = zipf_requests(ids, bs * n_batches, exponent=exponent,
+                         seed=seed)
+    return [flat[i * bs:(i + 1) * bs] for i in range(n_batches)]
+
+
+def _timed_req_per_s(engine, stream, rounds: int) -> float:
+    """Best-of-`rounds` drain throughput on an already-warm engine.
+    `reset_stats()` zeroes the request/row counters but keeps cache
+    CONTENTS, pack pools, and shape high-water marks — the steady state
+    the timing should measure."""
+    best = float("inf")
+    served = 0
+    for _ in range(rounds):
+        engine.reset_stats()
+        wall = _drain(engine, stream)
+        served = engine.stats.served
+        best = min(best, wall)
+    return round(served / best, 1)
+
+
+def _cache_section(smoke: bool) -> Dict:
+    """Propagated-feature cache rounds (see the module docstring):
+
+    * ``zipf`` — fresh cache-on vs cache-off engines over the same
+      Zipf(1.0) stream: bit-parity, hit/row accounting, then warm
+      best-of-rounds req/s and the zero-steady-state counters with the
+      cache enabled (seed shapes must bucket like everything else).
+    * ``no_hit_control`` — same stream, ``cache_fill=False``: the cache
+      machinery runs (probe per hop, seed operands threaded) but every
+      probe misses by construction, so hit_rate is exactly 0 and the
+      req/s ratio vs cache-off is a deterministic overhead bound.
+    * ``mutation`` — two engines over two lockstep `InMemoryStore`s;
+      after half the stream both stores get the same ``add_edges`` (the
+      endpoints drawn from already-cached nodes, so invalidation lands
+      on live entries) and ``add_nodes``; parity must survive, and the
+      cached engine must report stale invalidations.
+    * ``sharded`` — the same parity gate at D=2 with shard-local caches
+      (None when the backend exposes fewer than 2 devices).
+    """
+    from repro.gnn.store import InMemoryStore
+
+    g, cfg, params, nai = _setup(smoke)
+    bs = nai.batch_size
+    n_batches = 6 if smoke else 16
+    rounds = 2 if smoke else 3
+    capacity = 4096
+    kw = dict(max_wait_s=10.0, mode="compiled", spmm_impl="segment",
+              pipeline_depth=2)
+    stream = _cache_stream(g.test_idx, bs, n_batches, 1.0, seed=11)
+    section: Dict = {
+        "impl": "segment", "pipeline_depth": 2, "capacity": capacity,
+        "zipf_exponent": 1.0, "n_requests": bs * n_batches,
+        "batch_size": bs,
+    }
+
+    # --- Zipf round: parity + hit accounting on FRESH engines ---------
+    eng_on = NAIServingEngine(cfg, nai, params, g,
+                              cache_nodes=capacity, **kw)
+    eng_off = NAIServingEngine(cfg, nai, params, g, **kw)
+    p_on, o_on = _serve_collect(eng_on, stream)
+    p_off, o_off = _serve_collect(eng_off, stream)
+    cs = eng_on.cache_stats
+    zipf = {
+        "parity": bool(p_on == p_off and o_on == o_off),
+        "hit_rate": round(cs["hit_rate"], 4),
+        "hits": int(cs["hits"]), "stale": int(cs["stale"]),
+        "fills": int(cs["fills"]),
+        "rows_support": int(cs["rows_support"]),
+        "rows_packed": int(cs["rows_packed"]),
+        "rows_saved_frac": round(
+            1.0 - cs["rows_packed"] / max(cs["rows_support"], 1), 4),
+        "rows_packed_per_req": round(
+            cs["rows_packed"] / (bs * n_batches), 2),
+    }
+    # warm drains: the hit pattern saturates at drain 2, once every
+    # requested node is cached (same stream -> same hits thereafter),
+    # so the pack pool needs drain 3 to converge on the saturated
+    # shapes — one more warm pass than the cold engine's two
+    _drain(eng_on, stream)
+    _drain(eng_on, stream)
+    _drain(eng_off, stream)
+    c0, a0 = eng_on.jit_stats["compiles"], eng_on.pack_stats["allocs"]
+    zipf["req_per_s_on"] = _timed_req_per_s(eng_on, stream, rounds)
+    zipf["req_per_s_off"] = _timed_req_per_s(eng_off, stream, rounds)
+    zipf["steady_compiles"] = eng_on.jit_stats["compiles"] - c0
+    zipf["steady_pack_allocs"] = eng_on.pack_stats["allocs"] - a0
+    zipf["warm_hit_rate"] = round(eng_on.cache_stats["hit_rate"], 4)
+    section["zipf"] = zipf
+
+    # --- 0%-hit control ----------------------------------------------
+    ctl = NAIServingEngine(cfg, nai, params, g, cache_nodes=capacity,
+                           cache_fill=False, **kw)
+    _drain(ctl, stream)
+    _drain(ctl, stream)
+    rps_on = _timed_req_per_s(ctl, stream, rounds)
+    rps_off = _timed_req_per_s(eng_off, stream, rounds)
+    section["no_hit_control"] = {
+        "hit_rate": round(ctl.cache_stats["hit_rate"], 4),
+        "req_per_s_on": rps_on, "req_per_s_off": rps_off,
+        "overhead_ratio": round(rps_on / max(rps_off, 1e-9), 3),
+    }
+
+    # --- mutation round: lockstep stores, cached vs cold -------------
+    rng = np.random.default_rng(13)
+    s_hot, s_cold = InMemoryStore(g), InMemoryStore(g)
+    m_on = NAIServingEngine(cfg, nai, params, s_hot,
+                            cache_nodes=capacity, **kw)
+    m_off = NAIServingEngine(cfg, nai, params, s_cold, **kw)
+    half = max(n_batches // 2, 1)
+    p1, o1 = _serve_collect(m_on, stream[:half])
+    q1, r1 = _serve_collect(m_off, stream[:half])
+    hot = np.unique(np.concatenate(stream[:half]))
+    src = rng.choice(hot, size=min(8, len(hot)), replace=False)
+    dst = (src + 1) % g.n
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    new_feats = rng.normal(size=(2, g.features.shape[1])).astype(
+        np.float32)
+    for s in (s_hot, s_cold):
+        s.add_edges(src, dst)
+        new_ids = s.add_nodes(new_feats)
+    tail = list(stream[half:])
+    tail.append(np.concatenate([new_ids, hot[:max(bs - 2, 1)]]))
+    p2, o2 = _serve_collect(m_on, tail)
+    q2, r2 = _serve_collect(m_off, tail)
+    mcs = m_on.cache_stats
+    section["mutation"] = {
+        "parity": bool(p1 == q1 and o1 == r1 and p2 == q2 and o2 == r2),
+        "stale": int(mcs["stale"]), "hits": int(mcs["hits"]),
+        "hit_rate": round(mcs["hit_rate"], 4),
+        "edges_added": int(len(src)), "nodes_added": len(new_ids),
+        "mutation_clock": int(s_hot.mutation_clock),
+    }
+
+    # --- sharded D=2 parity ------------------------------------------
+    if len(jax.devices()) >= 2:
+        from repro.launch.mesh import make_serving_mesh
+        skw = dict(kw, mesh=make_serving_mesh(2), gather_mode="halo")
+        sh_on = NAIServingEngine(cfg, nai, params, g,
+                                 cache_nodes=capacity, **skw)
+        sh_off = NAIServingEngine(cfg, nai, params, g, **skw)
+        sp_on, so_on = _serve_collect(sh_on, stream)
+        sp_off, so_off = _serve_collect(sh_off, stream)
+        scs = sh_on.cache_stats
+        section["sharded"] = {
+            "devices": 2, "n_shards": sh_on.n_shards,
+            "parity": bool(sp_on == sp_off and so_on == so_off),
+            "hit_rate": round(scs["hit_rate"], 4),
+            "hits": int(scs["hits"]),
+        }
+    else:
+        section["sharded"] = None
+    return section
+
+
 def _series_structural(g, cfg, nai, stream) -> Dict:
     """Measure — not assume — the series-carry shape on the default
     serving shape: pack one stream batch and run the masked NAP core
@@ -423,7 +600,8 @@ def _series_structural(g, cfg, nai, stream) -> Dict:
 
 
 def collect(smoke: bool = False, sharded: bool = False,
-            graph_scale: bool = False, store_dir: str = "") -> Dict:
+            graph_scale: bool = False, store_dir: str = "",
+            cache: bool = False) -> Dict:
     # graph-scale first: its RSS gate wants a process that has not yet
     # allocated every other section's engines and operands
     gs = _graph_scale(smoke, store_dir) if graph_scale else None
@@ -477,6 +655,8 @@ def collect(smoke: bool = False, sharded: bool = False,
     if sharded:
         payload["sharded"] = _bench_configs(
             g, cfg, params, nai, _sharded_specs(smoke), stream, rounds)
+    if cache:
+        payload["cache"] = _cache_section(smoke)
     if gs is not None:
         payload["graph_scale"] = gs
     return payload
@@ -520,6 +700,46 @@ def check(payload: Dict) -> List[str]:
                             f"exceed the gathered frame "
                             f"{c['gather_rows_per_step']} (metadata "
                             f"bound violated)")
+    ca = payload.get("cache")
+    if ca is not None:
+        z = ca["zipf"]
+        if not z["parity"]:
+            errs.append("cache/zipf: cached serving diverged from cold "
+                        "(predictions/exit orders)")
+        if not z["hit_rate"] > 0:
+            errs.append("cache/zipf: hit_rate == 0 under Zipf(1.0) "
+                        "(the cache never served a frontier row)")
+        if z["rows_packed"] >= z["rows_support"]:
+            errs.append(f"cache/zipf: rows_packed {z['rows_packed']} >= "
+                        f"rows_support {z['rows_support']} (hits did "
+                        f"not shrink the packed SpMM)")
+        if z["steady_compiles"] > 0:
+            errs.append(f"cache/zipf: {z['steady_compiles']} jit "
+                        f"compiles in steady state with the cache on "
+                        f"(seed shapes defeat bucketing)")
+        if z["steady_pack_allocs"] > 0:
+            errs.append(f"cache/zipf: {z['steady_pack_allocs']} "
+                        f"bucket-sized pack allocations in steady state "
+                        f"with the cache on")
+        if ca["no_hit_control"]["hit_rate"] != 0.0:
+            errs.append("cache/no_hit_control: a probe hit with fills "
+                        "disabled (the control is not 0%-hit)")
+        if not ca["mutation"]["parity"]:
+            errs.append("cache/mutation: cached serving diverged from "
+                        "cold after add_edges/add_nodes")
+        if ca["mutation"]["stale"] <= 0:
+            errs.append("cache/mutation: zero stale invalidations — "
+                        "add_edges never landed on a cached entry's "
+                        "version block")
+        sh = ca.get("sharded")
+        if sh is not None:
+            if not sh["parity"]:
+                errs.append(f"cache/sharded/dev{sh['devices']}: cached "
+                            f"sharded serving diverged from cold")
+            if sh["n_shards"] != sh["devices"]:
+                errs.append(f"cache/sharded: engine reports "
+                            f"{sh['n_shards']} shards for "
+                            f"{sh['devices']} devices")
     gs = payload.get("graph_scale")
     if gs is not None:
         have = {r["n"] for r in gs["rows"]}
@@ -594,6 +814,42 @@ def _graph_scale_csv(gs: Dict) -> List[str]:
     return rows
 
 
+def _cache_csv(ca: Dict) -> List[str]:
+    rows = []
+    if not ca:
+        return rows
+    z = ca["zipf"]
+    rows.append(csv_row(
+        "serving/cache/zipf", 1e6 / max(z["req_per_s_on"], 1e-9),
+        f"req_per_s_on={z['req_per_s_on']};"
+        f"req_per_s_off={z['req_per_s_off']};"
+        f"hit_rate={z['hit_rate']};warm_hit_rate={z['warm_hit_rate']};"
+        f"rows_saved_frac={z['rows_saved_frac']};"
+        f"rows_packed_per_req={z['rows_packed_per_req']};"
+        f"parity={z['parity']};steady_compiles={z['steady_compiles']};"
+        f"steady_pack_allocs={z['steady_pack_allocs']}"))
+    nh = ca["no_hit_control"]
+    rows.append(csv_row(
+        "serving/cache/no_hit_control",
+        1e6 / max(nh["req_per_s_on"], 1e-9),
+        f"req_per_s_on={nh['req_per_s_on']};"
+        f"req_per_s_off={nh['req_per_s_off']};"
+        f"overhead_ratio={nh['overhead_ratio']}"))
+    mu = ca["mutation"]
+    rows.append(csv_row(
+        "serving/cache/mutation", 0.0,
+        f"parity={mu['parity']};stale={mu['stale']};"
+        f"hit_rate={mu['hit_rate']};edges_added={mu['edges_added']};"
+        f"nodes_added={mu['nodes_added']}"))
+    if ca.get("sharded"):
+        sh = ca["sharded"]
+        rows.append(csv_row(
+            f"serving/cache/sharded_dev{sh['devices']}", 0.0,
+            f"parity={sh['parity']};hit_rate={sh['hit_rate']};"
+            f"n_shards={sh['n_shards']}"))
+    return rows
+
+
 def _rows(payload: Dict) -> List[str]:
     rows = []
     for c in payload["configs"]:
@@ -610,6 +866,7 @@ def _rows(payload: Dict) -> List[str]:
                         f"device_sync_ms={c['device_sync_ms']}")
         rows.append(csv_row(name, us, derived))
     rows += _sharded_csv(payload.get("sharded", []))
+    rows += _cache_csv(payload.get("cache", {}))
     rows += _graph_scale_csv(payload.get("graph_scale", {}))
     st = payload["structural"]
     rows.append(csv_row(
@@ -649,6 +906,10 @@ def main() -> None:
                     help="add mesh-sharded serving rows (device counts "
                          "clipped to what the backend exposes; force "
                          "host devices via XLA_FLAGS for the full sweep)")
+    ap.add_argument("--cache", action="store_true",
+                    help="add the propagated-feature-cache section "
+                         "(Zipf stream, parity/mutation/0%%-hit-control "
+                         "rounds; sharded parity when >= 2 devices)")
     ap.add_argument("--graph-scale", action="store_true",
                     help="add the MmapStore graph-size sweep (graphs "
                          "generated on disk in a subprocess; 1e5-1e7 "
@@ -666,19 +927,21 @@ def main() -> None:
                             else "BENCH_serving.json")
     payload = collect(smoke=args.smoke, sharded=args.sharded,
                       graph_scale=args.graph_scale,
-                      store_dir=args.store_dir)
+                      store_dir=args.store_dir, cache=args.cache)
     print("name,us_per_call,derived")
     for r in _rows(payload):
         print(r, flush=True)
     # frontend_bench and chaos_bench merge their sections into this
-    # file; carry them across rewrites so regenerating the serving
+    # file; carry them — and any section this invocation's flags did
+    # not regenerate — across rewrites so regenerating the serving
     # record never drops them
     if os.path.exists(out_path):
         try:
             with open(out_path) as fh:
                 prev = json.load(fh)
-            for key in ("frontend", "chaos"):
-                if key in prev:
+            for key in ("frontend", "chaos", "cache", "sharded",
+                        "graph_scale"):
+                if key in prev and key not in payload:
                     payload[key] = prev[key]
         except (json.JSONDecodeError, OSError):
             pass
@@ -694,6 +957,12 @@ def main() -> None:
         print(f"WARNING: pipelined < serial req/s on the default shape "
               f"({cmp_['impl']}: {cmp_['pipelined_req_per_s']} vs "
               f"{cmp_['serial_req_per_s']}) — noise on this run?",
+              file=sys.stderr)
+    nh = payload.get("cache", {}).get("no_hit_control")
+    if nh is not None and nh["overhead_ratio"] < 1.0:
+        print(f"WARNING: cache-on req/s below cache-off at 0% hit rate "
+              f"(ratio {nh['overhead_ratio']}: {nh['req_per_s_on']} vs "
+              f"{nh['req_per_s_off']}) — probe/seed overhead or noise?",
               file=sys.stderr)
     if args.check:
         errs = check(payload)

@@ -5,23 +5,31 @@ block predication) + the fused nap_exit kernel, on a synthetic graph batch,
 and verifies it against the pure-numpy host path.
 
     PYTHONPATH=src python examples/kernels_demo.py
+
+Set ``EXAMPLES_SMOKE=1`` for the scaled-down CI shape.
 """
+import os
+
 import jax.numpy as jnp
 import numpy as np
 
 from repro.gnn import GNNConfig, load_dataset
 from repro.gnn.sampler import sample_support
+from repro.gnn.store import InMemoryStore
 from repro.kernels.nap_exit import exit_decision
 from repro.kernels.spmm import (RB, active_blocks_from_nodes, build_block_ell,
                                 pad_features, spmm)
 
-g = load_dataset("pubmed-like", scale=0.08, seed=0)
+SMOKE = bool(int(os.environ.get("EXAMPLES_SMOKE", "0")))
+
+g = load_dataset("pubmed-like", scale=0.03 if SMOKE else 0.08, seed=0)
 cfg = GNNConfig("sgc", g.features.shape[1], g.num_classes, k=4)
-batch = g.test_idx[:256]
+batch = g.test_idx[:64 if SMOKE else 256]
 T_MIN, T_MAX, T_S = 1, 4, 16.0
 
-# --- build the supporting subgraph + block-ELL operands
-sup = sample_support(g, batch, T_MAX, cfg.r)
+# --- build the supporting subgraph + block-ELL operands (store-first:
+# the sampler reads through the GraphStore row-gather API)
+sup = sample_support(InMemoryStore(g), batch, T_MAX, cfg.r)
 nb = sup.n_batch
 ell = build_block_ell(sup.src, sup.dst, sup.coef, len(sup))
 x = jnp.asarray(pad_features(g.features[sup.nodes], ell.n_pad))

@@ -4,22 +4,29 @@ Train NAI (base SGC + Inception Distillation) on a synthetic pubmed-scale
 graph, then run Node-Adaptive Inference at three latency settings.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Set ``EXAMPLES_SMOKE=1`` for the scaled-down CI shape.
 """
+import os
+
 import numpy as np
 
 from repro.gnn import (DistillConfig, GNNConfig, NAIConfig, accuracy,
                        infer_all, load_dataset, order_distribution, train_nai)
 from repro.gnn.baselines import run_vanilla
 
+SMOKE = bool(int(os.environ.get("EXAMPLES_SMOKE", "0")))
+
 # 1. data: inductive split — test nodes are unseen during training
-g = load_dataset("pubmed-like", scale=0.1, seed=0)
+g = load_dataset("pubmed-like", scale=0.03 if SMOKE else 0.1, seed=0)
 print(f"graph: {g.n} nodes, {g.num_edges} edges, {g.num_classes} classes")
 
 # 2. train the base model f^(k) and distill into per-order classifiers
 cfg = GNNConfig(base_model="sgc", feat_dim=g.features.shape[1],
                 num_classes=g.num_classes, k=4, hidden=64, mlp_layers=2)
+ep = (20, 10, 10) if SMOKE else (150, 80, 80)
 params, info = train_nai(cfg, g, DistillConfig(
-    epochs_base=150, epochs_offline=80, epochs_online=80))
+    epochs_base=ep[0], epochs_offline=ep[1], epochs_online=ep[2]))
 print(f"trained: base_loss={info['base_loss']:.4f}")
 
 # 3. vanilla inference = every node propagates k times

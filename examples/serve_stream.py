@@ -12,40 +12,64 @@ serving paths:
              CPU runs in interpret mode and is an emulation, not a
              timing)
 
+The compiled pass also enables the propagated-feature cache
+(``cache_nodes=``, README "Propagated-feature cache") and serves the
+burst stream twice: the second pass hits on frontier nodes the first
+pass cached, and ``engine.cache_stats`` shows the packed-SpMM rows the
+hits removed.
+
+The engine is store-first: graphs are served through a `GraphStore`
+(`InMemoryStore` here; `MmapStore` for on-disk graphs that must not be
+paged into RAM).
+
     PYTHONPATH=src python examples/serve_stream.py
+
+Set ``EXAMPLES_SMOKE=1`` for the scaled-down CI shape.
 """
+import os
 import time
 
 import numpy as np
 
 from repro.gnn import (DistillConfig, GNNConfig, NAIConfig, load_dataset,
                        train_nai)
+from repro.gnn.store import InMemoryStore
 from repro.serving import NAIServingEngine
 
-g = load_dataset("flickr-like", scale=0.03, seed=1)
+SMOKE = bool(int(os.environ.get("EXAMPLES_SMOKE", "0")))
+
+g = load_dataset("flickr-like", scale=0.01 if SMOKE else 0.03, seed=1)
 cfg = GNNConfig("sgc", g.features.shape[1], g.num_classes, k=4, hidden=64,
                 mlp_layers=2)
 print(f"[setup] training on {g.name}: n={g.n} m={g.num_edges}")
-params, _ = train_nai(cfg, g, DistillConfig(epochs_base=120,
-                                            epochs_offline=60,
-                                            epochs_online=60))
+ep = (20, 10, 10) if SMOKE else (120, 60, 60)
+params, _ = train_nai(cfg, g, DistillConfig(epochs_base=ep[0],
+                                            epochs_offline=ep[1],
+                                            epochs_online=ep[2]))
 
-nai = NAIConfig(t_s=12.0, t_min=1, t_max=3, batch_size=256)
+store = InMemoryStore(g)
+nai = NAIConfig(t_s=12.0, t_min=1, t_max=3,
+                batch_size=64 if SMOKE else 256)
 rng = np.random.default_rng(0)
-n_bursts, burst = 8, 400
+n_bursts, burst = (4, 100) if SMOKE else (8, 400)
 bursts = [rng.choice(g.test_idx, size=burst, replace=False)
           for _ in range(n_bursts)]
 
-for mode, kw in (("host", {}), ("compiled", {"spmm_impl": "segment"})):
-    engine = NAIServingEngine(cfg, nai, params, g, max_wait_s=0.005,
+for mode, kw in (("host", {}),
+                 ("compiled", {"spmm_impl": "segment",
+                               "cache_nodes": 4096})):
+    engine = NAIServingEngine(cfg, nai, params, store, max_wait_s=0.005,
                               mode=mode, **kw)
-    print(f"[serve:{mode}] {n_bursts} bursts x {burst} requests")
+    passes = 2 if mode == "compiled" else 1   # pass 2 hits pass 1's fills
     t0 = time.perf_counter()
-    for nodes in bursts:
-        engine.submit(nodes)
-        while engine.queue:
-            engine.step()
+    for p in range(passes):
+        for nodes in bursts:
+            engine.submit(nodes)
+            while engine.queue:               # a burst spans >1 batch
+                engine.step()
+        engine.flush()                        # drain the pipeline
     wall = time.perf_counter() - t0
+    print(f"[serve:{mode}] {passes}x {n_bursts} bursts x {burst} requests")
 
     s = engine.stats.summary()
     print(f"[result:{mode}] served={s['served']} batches={s['batches']} "
@@ -60,3 +84,7 @@ for mode, kw in (("host", {}), ("compiled", {"spmm_impl": "segment"})):
         print(f"[result:{mode}] jit compiles={engine.jit_stats['compiles']} "
               f"cache hits={engine.jit_stats['hits']} "
               f"(shape buckets keep steady-state compiles at 0)")
+        cs = engine.cache_stats
+        print(f"[result:{mode}] feature cache: hit_rate={cs['hit_rate']:.3f} "
+              f"rows_packed={cs['rows_packed']}/{cs['rows_support']} "
+              f"(hit frontier rows are dropped from the packed SpMM)")

@@ -96,15 +96,29 @@ HALO_LOGICAL: Dict[str, tuple] = {
     "halo_frame_src": ("halo_shard", None),
 }
 
+# propagated-feature-cache seed operands (pack_support(seeds=...) packs):
+# shard-stacked like the edge lists — the leading axis is the owning
+# shard, seed row ids are shard-LOCAL. The NAP loop scatters
+# `seed_vals[l-1]` over `seed_rows` after every step; backends never see
+# these keys (`_masked_loop` pops them).
+SEED_LOGICAL: Dict[str, tuple] = {
+    "seed_rows": ("row_shard", None),
+    "seed_vals": ("row_shard", None, None, None),
+}
+
 
 def operand_logical(backend: "PropagationBackend",
-                    gather_mode: str = "dense") -> Dict[str, tuple]:
+                    gather_mode: str = "dense",
+                    seeds: bool = False) -> Dict[str, tuple]:
     """The backend's operand key -> logical dims table, grown with the
-    halo specs for halo gather modes — the ONE table the engine's device
-    placement and `run_propagation`'s shard_map in_specs share."""
+    halo specs for halo gather modes and the cache-seed specs for
+    seeded packs — the ONE table the engine's device placement and
+    `run_propagation`'s shard_map in_specs share."""
     table = dict(backend.operand_logical)
     if gather_mode != "dense":
         table.update(HALO_LOGICAL)
+    if seeds:
+        table.update(SEED_LOGICAL)
     return table
 
 
@@ -305,6 +319,8 @@ def pack_operands(backend: PropagationBackend, packed,
                    halo_src_block=packed.halo_src_block,
                    halo_send_block=packed.halo_send_block,
                    halo_frame_src=packed.halo_frame_src)
+    if packed.seed_rows is not None:
+        ops.update(seed_rows=packed.seed_rows, seed_vals=packed.seed_vals)
     return ops
 
 
@@ -323,6 +339,13 @@ def _masked_loop(backend, nai, ops, x0, n_batch, n_rows, interpret,
     f = x0.shape[1]
     ts2_on = jnp.float32(nai.t_s) ** 2
     sa = ops.get("step_active")
+    seed_rows = ops.pop("seed_rows", None)
+    seed_vals = ops.pop("seed_vals", None)
+    if seed_rows is not None and seed_vals.shape[0] < tmax:
+        # static guard: jnp dynamic indexing CLAMPS out-of-range, so a
+        # too-short series would silently replay its last step
+        raise ValueError(f"seed_vals covers {seed_vals.shape[0]} steps, "
+                         f"loop needs {tmax}")
 
     def body(l, carry):
         x, series, exit_order, live = carry
@@ -338,6 +361,13 @@ def _masked_loop(backend, nai, ops, x0, n_batch, n_rows, interpret,
                                 interpret=interpret)
         exit_order = jnp.where((node_active != 0) & exits, l, exit_order)
         live = any_fn(exit_order == 0)
+        # cache-hit rows: overwrite whatever the (edge-dropped) step left
+        # there with the stored X^(l) values, so the NEXT step's gather
+        # reads exact propagated features. Pad ids point one past the row
+        # range — dropped. Batch rows are never seeded, so exits/series
+        # (batch region only) are unaffected by scatter order.
+        if seed_rows is not None:
+            x = x.at[seed_rows].set(seed_vals[l - 1], mode="drop")
         # per-step history carries batch rows only (classification never
         # reads support rows; see ROADMAP "Pipelined serving")
         series = series.at[l].set(x[:n_batch])
@@ -392,7 +422,8 @@ def _halo_gather(gather_mode: str, halo: dict, rows_loc: int):
 def run_propagation(backend: PropagationBackend, nai, operands: dict,
                     x0, n_batch: int, *, interpret: bool = True,
                     mesh=None, gather_mode: str = "dense",
-                    classify=None, cls_params=None):
+                    classify=None, cls_params=None,
+                    return_series: bool = False):
     """Run the masked NAP loop for any registered backend.
 
     ``operands`` holds the backend's packed arrays (including the dense
@@ -402,7 +433,11 @@ def run_propagation(backend: PropagationBackend, nai, operands: dict,
     ``classify(cls_params, exit_order, series)`` runs right after the
     loop, INSIDE shard_map when sharded, so each shard classifies its
     own batch rows and only the argmax class ids are gathered (the
-    series never leaves the sharded region).
+    series never leaves the sharded region). ``return_series=True``
+    (with ``classify``) additionally returns the (T_max+1, n_batch, f)
+    batch-row series as a third output — the propagated-feature cache's
+    fill source; sharded it IS gathered off the mesh, in packed batch
+    order like everything else.
 
     With ``mesh=None`` (or a ``data`` axis of size 1) this is the
     single-device path. Otherwise the loop runs under `shard_map`:
@@ -431,7 +466,10 @@ def run_propagation(backend: PropagationBackend, nai, operands: dict,
             any_fn=lambda m: jnp.any(m).astype(jnp.int32))
         if classify is None:
             return exit_order, series
-        return exit_order, classify(cls_params, exit_order, series)
+        preds = classify(cls_params, exit_order, series)
+        if return_series:
+            return exit_order, preds, series
+        return exit_order, preds
 
     if (gather_mode != "dense") != has_halo:
         raise ValueError(
@@ -445,14 +483,18 @@ def run_propagation(backend: PropagationBackend, nai, operands: dict,
             f"sharded operands must be packed with n_shards={D}: n_batch "
             f"{n_batch} and rows {S} must be multiples of CB*D = {CB * D}")
     nb_loc, rows_loc = n_batch // D, S // D
-    logical = operand_logical(backend, gather_mode)
+    logical = operand_logical(backend, gather_mode,
+                              seeds="seed_rows" in operands)
     keys = tuple(logical)
     arrays = [operands[k] for k in keys]
     in_specs = tuple(spec(*logical[k], mesh=mesh) for k in keys) \
         + (spec("row_shard", None, mesh=mesh),)
+    series_spec = spec(None, "row_shard", None, mesh=mesh)
     out_specs = (spec("row_shard", mesh=mesh),
                  spec("row_shard", mesh=mesh) if classify is not None
-                 else spec(None, "row_shard", None, mesh=mesh))
+                 else series_spec)
+    if classify is not None and return_series:
+        out_specs += (series_spec,)
     if classify is not None:
         in_specs += (spec(mesh=mesh),)   # replicated classifier tree
 
@@ -473,6 +515,10 @@ def run_propagation(backend: PropagationBackend, nai, operands: dict,
         if backend.uses_edges:
             # (D, e) shard-stacked edge arrays block-slice to (1, e)
             ops.update({k: ops[k][0] for k in ("src", "dst", "coef")})
+        if "seed_rows" in ops:
+            # (D, k) / (D, L, k, f) shard-stacked seeds slice likewise
+            ops.update(seed_rows=ops["seed_rows"][0],
+                       seed_vals=ops["seed_vals"][0])
         backend.validate(ops, x0_loc, nb_loc)
         exit_order, series = _masked_loop(
             backend, nai, ops, x0_loc, nb_loc, rows_loc, interpret,
@@ -481,7 +527,10 @@ def run_propagation(backend: PropagationBackend, nai, operands: dict,
                                            "data") > 0).astype(jnp.int32))
         if classify is None:
             return exit_order, series
-        return exit_order, classify(params, exit_order, series)
+        preds = classify(params, exit_order, series)
+        if return_series:
+            return exit_order, preds, series
+        return exit_order, preds
 
     # check_rep=False: the rep-tracker cannot see through the fori_loop
     # carry; correctness is covered by the bit-parity tests

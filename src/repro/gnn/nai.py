@@ -298,7 +298,8 @@ def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
                         spmm_impl: str = "block_ell",
                         interpret: bool = True,
                         donate: Optional[bool] = None,
-                        mesh=None, gather_mode: str = "dense"):
+                        mesh=None, gather_mode: str = "dense",
+                        return_series: bool = False):
     """One jitted function: masked NAP propagation + per-order
     classification (unrolled over orders, selected by exit mask).
 
@@ -334,6 +335,13 @@ def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
     Default (None) enables donation everywhere except the CPU backend,
     which does not implement donation and would warn per compile. The
     effective donated argnums are exposed as ``run._donate_argnums``.
+
+    `return_series=True` makes the callable return ``(predictions,
+    exit_order, series (T_max+1, nb, f))`` — the batch-row propagation
+    history in ORIGINAL batch order, which the serving engine's
+    propagated-feature cache fills from (steps 1..T_max of a batch row
+    are exact global values, since batch rows always propagate at the
+    full budget).
     """
     backend = get_backend(spmm_impl)
     tmax = nai.t_max
@@ -364,16 +372,24 @@ def make_compiled_infer(cfg: GNNConfig, nai: NAIConfig, *,
         ops = dict(operands)
         if backend.uses_dense_x_inf:
             ops["x_inf"] = x_inf
-        exit_order, preds = run_propagation(
+        out = run_propagation(
             backend, nai, ops, x0, nb, interpret=interpret, mesh=mesh,
             gather_mode=gather_mode, classify=classify,
-            cls_params=cls_params)
+            cls_params=cls_params, return_series=return_series)
+        if return_series:
+            exit_order, preds, series = out
+        else:
+            (exit_order, preds), series = out, None
         if n_shards > 1:
             # shard-major packed order -> original batch order (a static
             # gather; shard_batch_perm[r] is where batch row r landed)
             unperm = shard_batch_perm(nb, n_shards)
             exit_order = exit_order[unperm]
             preds = preds[unperm]
+            if series is not None:
+                series = series[:, unperm, :]
+        if return_series:
+            return preds, exit_order, series
         return preds, exit_order
 
     run._donate_argnums = donate_argnums

@@ -180,6 +180,14 @@ class PackedSupport:
     halo_count: Optional[np.ndarray] = None       # (D,) int32 real entries
     halo_send_block: Optional[np.ndarray] = None  # (D, D, B_pad) int32
     halo_frame_src: Optional[np.ndarray] = None   # (D, H_pad) int32
+    # propagated-feature-cache seed operands (seeds= packs only): padded
+    # row ids of cache-hit rows (pad entries point one past the local row
+    # range — dropped by the `mode="drop"` scatter in the NAP loop) and
+    # their per-step series values. Sharded they carry a leading shard
+    # axis and shard-LOCAL row ids, like the edge arrays.
+    seed_rows: Optional[np.ndarray] = None   # (k_pad,) / (D, k_pad) int32
+    seed_vals: Optional[np.ndarray] = None   # (L, k_pad, f_pad) /
+    #                                          (D, L, k_pad, f_pad) f32
 
     @property
     def n_rb(self) -> int:
@@ -210,6 +218,11 @@ class PackedSupport:
                 else int(self.halo_count.max()) * CB)
 
     @property
+    def seed_pad(self) -> int:
+        """Bucket-padded cache-seed rows per shard (0 = no-cache pack)."""
+        return 0 if self.seed_rows is None else self.seed_rows.shape[-1]
+
+    @property
     def halo_frac(self) -> float:
         """halo_rows / n_pad — 1.0 means the halo set degenerated to the
         full frontier (no communication saving over the dense gather)."""
@@ -236,6 +249,9 @@ class PackedSupport:
                    self.x0.shape[1], self.src.shape[-1])
         if self.halo_src_shard is not None:
             key += ("halo", self.n_halo_pad, self.halo_send_pad)
+        if self.seed_rows is not None:
+            key += ("seed", self.seed_vals.shape[-3],
+                    self.seed_vals.shape[-2])
         return key
 
 
@@ -259,7 +275,9 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
                  n_shards: int = 1,
                  halo: bool = False,
                  h_bucket: Optional[int] = None,
-                 hb_bucket: Optional[int] = None) -> PackedSupport:
+                 hb_bucket: Optional[int] = None,
+                 seeds=None,
+                 k_bucket: Optional[int] = None) -> PackedSupport:
     """Pack a sampled `Support` (+ its features and per-batch-node
     stationary state) into bucket-padded block-ELL operands.
 
@@ -306,7 +324,19 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
     `src` ids into FRAME-local coordinates, so the propagation loop can
     gather H_pad·CB frame rows per step instead of the full S_pad
     frontier. `h_bucket` / `hb_bucket` are hwm floors for the frame and
-    send-list pads, same contract as the other buckets."""
+    send-list pads, same contract as the other buckets.
+
+    `seeds=(hit, vals)` (the propagated-feature-cache path, see
+    `repro.gnn.propcache`): `hit` is the per-support-row boolean hit
+    mask from the sampler, `vals` the (k_hit, L, F) cached series in
+    `nodes[hit]` order. Edges INTO hit rows are dropped before tiling —
+    their values are not recomputed but scattered from `seed_vals` after
+    every SpMM step — while edges FROM hit rows stay (miss rows still
+    read them as sources). Hit rows get hop `_INF_HOP` so row blocks
+    that are entirely cache-served are skipped by the step-active mask.
+    `k_bucket` is the hwm floor for the seed-row pad, same contract as
+    the other buckets. Batch rows must never be marked hit (their series
+    is the output)."""
     row_align = CB * n_shards
     batch_align = RB if n_shards == 1 else CB * n_shards
     if s_bucket and s_bucket % row_align:
@@ -321,9 +351,28 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
     n_pad = max(next_bucket(-(-rows_needed // row_align), 1) * row_align,
                 s_bucket or 0)
 
+    seeds_on = seeds is not None
+    if seeds_on:
+        hit_mask, seed_series = seeds
+        if hit_mask[:nb].any():
+            raise ValueError("batch rows must not be cache hits")
+    if seeds_on and hit_mask.any():
+        # drop edges INTO hit rows (their values are seeded, not
+        # recomputed); edges FROM hit rows stay — miss rows read them
+        keep_e = ~hit_mask[sup.dst]
+        e_src_l, e_dst_l = sup.src[keep_e], sup.dst[keep_e]
+        e_coef = sup.coef[keep_e]
+        hop_eff = np.where(hit_mask, _INF_HOP, sup.hop)
+    else:
+        # no hits: skip the edge-mask copies (an all-True fancy index
+        # still copies every edge array — measurable at 0% hit rate);
+        # seed operands are still emitted below so shapes stay stable
+        e_src_l, e_dst_l, e_coef = sup.src, sup.dst, sup.coef
+        hop_eff = sup.hop
+
     row_of = _remap_rows(sup, nb_bucket)
-    src = row_of[sup.src]
-    dst = row_of[sup.dst]
+    src = row_of[e_src_l]
+    dst = row_of[e_dst_l]
 
     # --- tile geometry (needed up front so buffer reuse can be decided
     # before anything is written)
@@ -391,6 +440,23 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
     e_shape = ((n_shards, e_pad) if n_shards > 1 and build_edges
                else (e_pad,))
 
+    # --- seed geometry (before the reuse decision, like everything else
+    # that sizes a pooled buffer)
+    if seeds_on:
+        hit_idx = np.flatnonzero(hit_mask)
+        seed_len = seed_series.shape[1]
+        sd_dest = row_dest[hit_idx]
+        if n_shards > 1:
+            sd_shard = sd_dest // rows_loc
+            sd_counts = np.bincount(sd_shard, minlength=n_shards)
+            k_needed = max(int(sd_counts.max()) if len(hit_idx) else 1, 1)
+        else:
+            k_needed = max(len(hit_idx), 1)
+        k_pad = max(next_bucket(k_needed, 1), k_bucket or 0)
+        sr_shape = (n_shards, k_pad) if n_shards > 1 else (k_pad,)
+        sv_shape = ((n_shards, seed_len, k_pad, f_pad) if n_shards > 1
+                    else (seed_len, k_pad, f_pad))
+
     reuse = (out is not None
              and out.n_shards == n_shards
              and out.tiles.shape == (n_rb, tb, RB, CB)
@@ -402,7 +468,11 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
              and (not halo_on
                   or (out.halo_src_shard.shape == (n_shards, h_pad)
                       and out.halo_send_block.shape
-                      == (n_shards, n_shards, hb_pad))))
+                      == (n_shards, n_shards, hb_pad)))
+             and (out.seed_rows is not None) == seeds_on
+             and (not seeds_on
+                  or (out.seed_rows.shape == sr_shape
+                      and out.seed_vals.shape == sv_shape)))
     if reuse:
         p = out
         p.tiles.fill(0.0)
@@ -435,7 +505,10 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
             halo_send_block=(np.zeros((n_shards, n_shards, hb_pad),
                                       np.int32) if halo_on else None),
             halo_frame_src=(np.zeros((n_shards, h_pad), np.int32)
-                            if halo_on else None))
+                            if halo_on else None),
+            seed_rows=(np.zeros(sr_shape, np.int32) if seeds_on else None),
+            seed_vals=(np.zeros(sv_shape, np.float32)
+                       if seeds_on else None))
     p.n_batch, p.nb_real, p.n_pad, p.s_real = nb_bucket, nb, n_pad, S
     p.n_shards = n_shards
     p.reused = reuse
@@ -497,18 +570,18 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
                     packed_cb.astype(np.int32)
             p.valid[rb_perm[tile_rb], slot] = 1
             np.add.at(p.tiles, (rb_perm[rb], slot[inverse], dst % RB,
-                                src % CB), sup.coef)
+                                src % CB), e_coef)
         else:
             p.tile_col[tile_rb, slot] = tile_cb
             p.valid[tile_rb, slot] = 1
             np.add.at(p.tiles, (rb, slot[inverse], dst % RB, src % CB),
-                      sup.coef)
+                      e_coef)
 
     # --- per-row hop -> per-row-block min hop; the (n_pad,) scratch is
     # KB-scale and the vectorized scatter + reshape-min beats a buffered
     # ufunc.at by an order of magnitude on large supports
     hop_row = np.full(n_pad, _INF_HOP, np.int32)
-    hop_row[row_dest] = sup.hop
+    hop_row[row_dest] = hop_eff
     p.hop_rb[:] = hop_row.reshape(n_rb, RB).min(axis=1)
 
     p.x0[row_dest, :x0.shape[1]] = np.asarray(x0, np.float32)
@@ -553,14 +626,36 @@ def pack_support(sup: Support, x0: np.ndarray, x_inf: np.ndarray, *,
                 k = int(e_counts[sh])
                 p.src[sh, :k] = src_x[m].astype(np.int32)
                 p.dst[sh, :k] = (dst_p[m] - sh * rows_loc).astype(np.int32)
-                p.coef[sh, :k] = sup.coef[m]
+                p.coef[sh, :k] = e_coef[m]
         else:
             p.src.fill(n_pad - 1)
             p.dst.fill(n_pad - 1)
             p.coef.fill(0.0)
             p.src[:len(src)] = src
             p.dst[:len(dst)] = dst
-            p.coef[:len(sup.coef)] = sup.coef
+            p.coef[:len(e_coef)] = e_coef
+
+    # --- cache-seed operands: padded row ids of hit rows + their series,
+    # padded to k_pad (pad ids point one past the [local] row range — the
+    # NAP loop's `mode="drop"` scatter ignores them)
+    if seeds_on:
+        fh = seed_series.shape[2]
+        if n_shards > 1:
+            p.seed_rows.fill(rows_loc)
+            p.seed_vals.fill(0.0)
+            for sh in range(n_shards):
+                m = sd_shard == sh
+                k = int(sd_counts[sh])
+                p.seed_rows[sh, :k] = \
+                    (sd_dest[m] - sh * rows_loc).astype(np.int32)
+                p.seed_vals[sh, :, :k, :fh] = \
+                    seed_series[m].transpose(1, 0, 2)
+        else:
+            p.seed_rows.fill(n_pad)
+            p.seed_vals.fill(0.0)
+            p.seed_rows[:len(sd_dest)] = sd_dest.astype(np.int32)
+            p.seed_vals[:, :len(sd_dest), :fh] = \
+                seed_series.transpose(1, 0, 2)
     return p
 
 

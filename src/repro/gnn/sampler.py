@@ -28,7 +28,7 @@ duplicates make the local-id map ambiguous in both implementations.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -44,6 +44,10 @@ class Support:
     dst: np.ndarray            # (Es,) LOCAL ids
     coef: np.ndarray           # (Es,) propagation coefficients
     sub_edges: int             # undirected edge count of the subgraph
+    # propagated-feature cache plumbing (None when sampled without one)
+    hit: Optional[np.ndarray] = None        # (S,) bool cache-hit mask
+    seed_vals: Optional[np.ndarray] = None  # (k_hit, t_max, F) series
+    graph_version: int = 0     # store.mutation_clock at sample time
     def __len__(self):
         return len(self.nodes)
 
@@ -93,13 +97,25 @@ def _first_occurrence(a: np.ndarray) -> np.ndarray:
     return a[np.sort(first)]
 
 
-def sample_support(store, batch: np.ndarray, hops: int, r: float
-                   ) -> Support:
+def sample_support(store, batch: np.ndarray, hops: int, r: float,
+                   *, cache=None) -> Support:
     """Vectorized frontier expansion (numpy repeat/unique, no dicts)
     over a `GraphStore`'s CSR views. `store` may also be a raw `Graph`
-    (deprecated — wrapped via `as_store`)."""
+    (deprecated — wrapped via `as_store`).
+
+    With `cache` (a `repro.gnn.propcache.PropCache`), each discovered
+    layer is probed and hit nodes are marked in `Support.hit`, with
+    their stored series in `Support.seed_vals`. The BFS still expands
+    THROUGH hit nodes: the stationary exit factors (x_inf) depend on
+    the full support's degrees/edges, so pruning the frontier at hits
+    would change the exit decision and break cached-vs-cold bit-parity.
+    The savings are downstream — hit rows' incoming edges are dropped
+    from the packed block-ELL and their values seeded per step instead
+    of recomputed (see `packing.pack_support`).
+    """
     store = as_store(store, warn=True)
     row_ptr, col_idx = store.csr()
+    graph_version = store.mutation_clock
     scratch = _scratch(store)
     scratch.epoch += 1
     epoch, seen = scratch.epoch, scratch.seen_stamp
@@ -107,6 +123,8 @@ def sample_support(store, batch: np.ndarray, hops: int, r: float
     seen[batch] = epoch
     node_parts: List[np.ndarray] = [batch]
     hop_parts: List[np.ndarray] = [np.zeros(len(batch), np.int32)]
+    # batch rows are never cache-served: their series IS the output
+    hit_parts: List[np.ndarray] = [np.zeros(len(batch), bool)]
     frontier = batch
     for h in range(1, hops + 1):
         if len(frontier) == 0:
@@ -117,9 +135,13 @@ def sample_support(store, batch: np.ndarray, hops: int, r: float
         seen[new] = epoch
         node_parts.append(new)
         hop_parts.append(np.full(len(new), h, np.int32))
+        hit_parts.append(cache.probe(store, new) if cache is not None
+                         else np.zeros(len(new), bool))
         frontier = new
     nodes = np.concatenate(node_parts)
     hop = np.concatenate(hop_parts)
+    hit = np.concatenate(hit_parts) if cache is not None else None
+    seed_vals = cache.gather(nodes[hit]) if cache is not None else None
 
     # induced edges (j -> i), ordered by destination's local id then CSR
     lstamp, lid = scratch.local_stamp, scratch.local_id
@@ -136,7 +158,9 @@ def sample_support(store, batch: np.ndarray, hops: int, r: float
     # dropped, e.g. a train subgraph, would undercount otherwise)
     sub_edges = (len(src) - int((src == dst).sum())) // 2
     return Support(nodes=nodes, hop=hop, n_batch=len(batch), src=src,
-                   dst=dst, coef=coef, sub_edges=max(sub_edges, 0))
+                   dst=dst, coef=coef, sub_edges=max(sub_edges, 0),
+                   hit=hit, seed_vals=seed_vals,
+                   graph_version=graph_version)
 
 
 def _edge_coefs(store: GraphStore, nodes: np.ndarray, src: np.ndarray,

@@ -82,6 +82,15 @@ FORMAT = "repro-graphstore-v1"
 
 _ARRAYS = ("row_ptr", "col_idx", "features", "degrees", "labels")
 
+# Granularity of mutation versioning: one version counter per
+# VERSION_BLOCK consecutive node ids. Deliberately equal to the SpMM
+# kernel's CB (repro.kernels.spmm.kernel.CB) — the column-block /
+# superblock granularity the packer, the halo exchange, and the sharded
+# row partition already speak — so propagated-feature cache invalidation
+# (repro.gnn.propcache) is block-granular in exactly the units the rest
+# of the serving stack is built around. Pinned by tests.
+VERSION_BLOCK = 128
+
 
 class StoreError(Exception):
     """Base class for typed storage failures. Catching this (rather than
@@ -197,6 +206,147 @@ class GraphStore:
         stores). Returns the estimated bytes released."""
         return 0
 
+    # -- graph mutation (the inductive setting: the graph grows while
+    # the engine serves). Mutations are copy-on-write: the first one
+    # materializes private CSR/degree arrays (`_materialize_mutable`),
+    # after which the store no longer reads the wrapped Graph / the
+    # on-disk files for those views. Every mutation bumps a monotone
+    # `mutation_clock` and stamps the VERSION_BLOCK-granular
+    # `block_versions` of exactly the touched node blocks — what the
+    # propagated-feature cache (repro.gnn.propcache) validates against.
+    @property
+    def mutation_clock(self) -> int:
+        """Monotone store-wide mutation counter (0 = never mutated)."""
+        return self.__dict__.get("_mut_clock", 0)
+
+    @property
+    def block_versions(self) -> np.ndarray:
+        """(ceil(n / VERSION_BLOCK),) int64 — the mutation_clock value at
+        which each node block was last touched (0 = never). Grows with
+        `add_nodes`; existing stamps keep their positions because node
+        ids are append-only."""
+        bv = self.__dict__.get("_block_versions")
+        n_blocks = max(-(-self.n // VERSION_BLOCK), 1)
+        if bv is None or len(bv) < n_blocks:
+            grown = np.zeros(n_blocks, np.int64)
+            if bv is not None:
+                grown[:len(bv)] = bv
+            self.__dict__["_block_versions"] = bv = grown
+        return bv
+
+    def _stamp_blocks(self, nodes: np.ndarray) -> int:
+        """Bump the clock and stamp the blocks containing `nodes`.
+        Stamping ONLY the touched endpoints' blocks is sound for the
+        propagated-feature cache because a cached X^(l)[v] depends only
+        on x0 / degrees / CSR rows of nodes the fill support contained —
+        and those dependency blocks are recorded per fill, so any stamp
+        on one of them invalidates the entry (see repro.gnn.propcache)."""
+        clock = self.mutation_clock + 1
+        self.__dict__["_mut_clock"] = clock
+        blocks = np.unique(np.asarray(nodes, np.int64) // VERSION_BLOCK)
+        self.block_versions[blocks] = clock
+        return clock
+
+    def _mutable(self) -> Dict[str, Optional[np.ndarray]]:
+        own = self.__dict__.get("_own")
+        if own is None:
+            own = self._materialize_mutable()
+            self.__dict__["_own"] = own
+        return own
+
+    def _materialize_mutable(self) -> Dict[str, Optional[np.ndarray]]:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support mutation")
+
+    def _append_features(self, feats: np.ndarray,
+                         labels: np.ndarray) -> None:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support add_nodes")
+
+    def add_edges(self, src, dst) -> int:
+        """Add undirected edges (src[i], dst[i]): each endpoint is
+        appended to the other's in-neighbor CSR row (after any existing
+        entries, in call order — deterministic), degrees and `num_edges`
+        are updated, and the endpoints' version blocks are stamped.
+        Self pairs are rejected (self loops are structural, exactly one
+        per row, managed by the store build). Returns the number of
+        undirected edges added.
+
+        Copy-on-write: reads through the store see the new topology
+        immediately; a wrapped `Graph` / the on-disk files keep the
+        pre-mutation data (all consumers must read through the store,
+        which is what `as_store` memoization guarantees)."""
+        src = np.atleast_1d(np.asarray(src, np.int64))
+        dst = np.atleast_1d(np.asarray(dst, np.int64))
+        if src.shape != dst.shape or src.ndim != 1:
+            raise ValueError(f"src/dst must be equal-length 1-D id "
+                             f"arrays, got {src.shape} and {dst.shape}")
+        if len(src) == 0:
+            return 0
+        both = np.concatenate([src, dst])
+        if both.min() < 0 or both.max() >= self.n:
+            raise ValueError(f"edge endpoint out of range for n={self.n}")
+        if np.any(src == dst):
+            raise ValueError("self pairs are not addable edges (each row "
+                             "already carries exactly one self loop)")
+        own = self._mutable()
+        # u->v lands in row v, v->u in row u (undirected: both rows grow)
+        rows = np.concatenate([dst, src])
+        vals = np.concatenate([src, dst]).astype(own["col_idx"].dtype)
+        pos = own["row_ptr"][rows + 1]      # end of each row, old coords
+        own["col_idx"] = np.insert(own["col_idx"], pos, vals)
+        counts = np.bincount(rows, minlength=self.n)
+        own["row_ptr"][1:] += np.cumsum(counts)
+        np.add.at(own["degrees"], rows, 1)
+        self.num_edges += len(src)
+        self._stamp_blocks(both)
+        return len(src)
+
+    def add_nodes(self, features, labels=None) -> np.ndarray:
+        """Append new nodes, each with its self loop and no other edges
+        (connect them afterwards with `add_edges`). `features` is
+        (k, feat_dim); `labels` optional (k,), default -1. Returns the
+        new node ids. Bumps the clock and stamps only the NEW blocks —
+        existing rows/degrees are untouched, so no cached entry over the
+        old graph is invalidated (exactness is preserved: an isolated
+        new node changes no existing propagated value)."""
+        feats = np.atleast_2d(np.asarray(features, np.float32))
+        k = len(feats)
+        if k == 0:
+            return np.empty(0, np.int64)
+        if feats.shape[1] != self.feat_dim:
+            raise ValueError(f"features must be (k, {self.feat_dim}), "
+                             f"got {feats.shape}")
+        labs = (np.full(k, -1, np.int32) if labels is None
+                else np.atleast_1d(np.asarray(labels, np.int32)))
+        if labs.shape != (k,):
+            raise ValueError(f"labels must be ({k},), got {labs.shape}")
+        own = self._mutable()
+        n0 = self.n
+        new_ids = np.arange(n0, n0 + k, dtype=np.int64)
+        own["row_ptr"] = np.concatenate(
+            [own["row_ptr"],
+             own["row_ptr"][-1] + np.arange(1, k + 1, dtype=np.int64)])
+        own["col_idx"] = np.concatenate(
+            [own["col_idx"], new_ids.astype(own["col_idx"].dtype)])
+        own["degrees"] = np.concatenate(
+            [own["degrees"], np.zeros(k, own["degrees"].dtype)])
+        self._append_features(feats, labs)
+        self.n = n0 + k
+        self.num_self_loops += k
+        # stamp only FULLY-new blocks: a shared tail block also holds
+        # pre-existing nodes, and stamping it would needlessly stale
+        # their cached entries while an isolated new node changes no
+        # existing propagated value. The clock still bumps; wiring a
+        # new node in via add_edges stamps its block like any endpoint.
+        n_old_blocks = -(-n0 // VERSION_BLOCK)
+        fresh = new_ids[new_ids // VERSION_BLOCK >= n_old_blocks]
+        if len(fresh):
+            self._stamp_blocks(fresh)
+        else:
+            self.__dict__["_mut_clock"] = self.mutation_clock + 1
+        return new_ids
+
     # -- lifecycle: stores are context managers so fds/maps are released
     # deterministically (engines and benches call close(); __del__ on
     # file-backed stores is only a backstop)
@@ -239,25 +389,50 @@ class InMemoryStore(GraphStore):
         self.num_edges = graph.num_edges
         self._degrees = graph.degrees
 
+    def _materialize_mutable(self):
+        """First mutation: private copies of every view (the wrapped
+        Graph stays at its pre-mutation topology and must no longer be
+        read directly — `as_store` memoizes one store per Graph, so all
+        serving consumers already read through here)."""
+        rp, ci = self.graph.csr()
+        labels = self.graph.labels
+        return {"row_ptr": np.array(rp, np.int64),
+                "col_idx": np.array(ci, np.int32),
+                "degrees": np.array(self._degrees, np.int64),
+                "features": np.array(self.graph.features, np.float32),
+                "labels": (None if labels is None
+                           else np.array(labels, np.int32))}
+
+    def _append_features(self, feats, labs):
+        own = self._mutable()
+        own["features"] = np.concatenate([own["features"], feats])
+        if own["labels"] is not None:
+            own["labels"] = np.concatenate([own["labels"], labs])
+
     @property
     def row_ptr(self) -> np.ndarray:
-        return self.graph.csr()[0]
+        own = self.__dict__.get("_own")
+        return own["row_ptr"] if own is not None else self.graph.csr()[0]
 
     @property
     def col_idx(self) -> np.ndarray:
-        return self.graph.csr()[1]
+        own = self.__dict__.get("_own")
+        return own["col_idx"] if own is not None else self.graph.csr()[1]
 
     @property
     def features(self) -> np.ndarray:
-        return self.graph.features
+        own = self.__dict__.get("_own")
+        return own["features"] if own is not None else self.graph.features
 
     @property
     def degrees(self) -> np.ndarray:
-        return self._degrees
+        own = self.__dict__.get("_own")
+        return own["degrees"] if own is not None else self._degrees
 
     @property
     def labels(self) -> Optional[np.ndarray]:
-        return self.graph.labels
+        own = self.__dict__.get("_own")
+        return own["labels"] if own is not None else self.graph.labels
 
 
 class MmapStore(GraphStore):
@@ -312,6 +487,8 @@ class MmapStore(GraphStore):
         self.meta = meta
         self.name = meta.get("name", os.path.basename(self.path))
         self.n = int(meta["n"])
+        self._base_n = self.n       # on-disk node count (mutations are
+                                    # in-RAM overlays; files never change)
         self.feat_dim = int(meta["feat_dim"])
         self.num_classes = int(meta.get("num_classes", 0))
         self.num_edges = int(meta["num_edges"])
@@ -351,12 +528,13 @@ class MmapStore(GraphStore):
         """Build-time shape of an array view, from meta.json scalars —
         a cheap corruption check that needs no file reads beyond the
         .npy header (col_idx length comes from row_ptr's last slot)."""
+        base_n = getattr(self, "_base_n", self.n)
         if key == "row_ptr":
-            return (self.n + 1,)
+            return (base_n + 1,)
         if key == "features":
-            return (self.n, self.feat_dim)
+            return (base_n, self.feat_dim)
         if key in ("degrees", "labels"):
-            return (self.n,)
+            return (base_n,)
         if key == "col_idx":
             return (int(self._load("row_ptr")[-1]),)
         return None
@@ -391,7 +569,7 @@ class MmapStore(GraphStore):
         self._check_open()
         if self._feat_fd < 0:
             p = os.path.join(self.path, "features.npy")
-            nbytes = self.n * self.feat_dim * 4
+            nbytes = self._base_n * self.feat_dim * 4
             off = os.path.getsize(p) - nbytes
             if off <= 0:
                 raise ValueError(f"{p}: expected {nbytes} bytes of "
@@ -400,11 +578,49 @@ class MmapStore(GraphStore):
             self._feat_off = off
         return self._feat_fd, self._feat_off
 
+    def _materialize_mutable(self):
+        """First mutation: the CSR/degree/label views move to RAM copies
+        (O(E) — mutation on an MmapStore is meant for inductive serving
+        tests and modest deltas, not for rewriting a 1e7-node graph).
+        FEATURES stay on disk: appended nodes' rows live in an in-RAM
+        overlay consumed by `gather_features`, so the dominant byte cost
+        keeps its streaming behavior. The on-disk files are never
+        touched (and `verify()` still checks them)."""
+        own = {"row_ptr": np.array(self._load("row_ptr"), np.int64),
+               "col_idx": np.array(self._load("col_idx"), np.int32),
+               "degrees": np.array(self._load("degrees"), np.int64)}
+        lab = self._load("labels")
+        own["labels"] = None if lab is None else np.array(lab, np.int32)
+        return own
+
+    def _append_features(self, feats, labs):
+        own = self._mutable()
+        extra = self.__dict__.get("_extra_feat")
+        self.__dict__["_extra_feat"] = (
+            feats if extra is None else np.concatenate([extra, feats]))
+        if own["labels"] is not None:
+            own["labels"] = np.concatenate([own["labels"], labs])
+
     def gather_features(self, nodes: np.ndarray) -> np.ndarray:
-        if self._mmap_mode is None:
-            return np.asarray(self.features[nodes])
         nodes = np.atleast_1d(np.asarray(nodes)).astype(np.int64,
                                                         copy=False)
+        if self.n > self._base_n:
+            # appended-node overlay: split the gather, base rows from
+            # disk, overlay rows from RAM, reassembled in `nodes` order
+            is_new = nodes >= self._base_n
+            if is_new.any():
+                out = np.empty((len(nodes), self.feat_dim), np.float32)
+                out[is_new] = \
+                    self._extra_feat[nodes[is_new] - self._base_n]
+                old = ~is_new
+                if old.any():
+                    out[old] = self._gather_base(nodes[old])
+                return out
+        return self._gather_base(nodes)
+
+    def _gather_base(self, nodes: np.ndarray) -> np.ndarray:
+        if self._mmap_mode is None:
+            return np.asarray(self._load("features")[nodes])
         row = self.feat_dim * 4
         fd, base = self._feat_file()
         out = np.empty((len(nodes), self.feat_dim), np.float32)
@@ -493,23 +709,29 @@ class MmapStore(GraphStore):
 
     @property
     def row_ptr(self) -> np.ndarray:
-        return self._load("row_ptr")
+        own = self.__dict__.get("_own")
+        return own["row_ptr"] if own is not None else self._load("row_ptr")
 
     @property
     def col_idx(self) -> np.ndarray:
-        return self._load("col_idx")
+        own = self.__dict__.get("_own")
+        return own["col_idx"] if own is not None else self._load("col_idx")
 
     @property
     def features(self) -> np.ndarray:
+        """The on-disk (base) feature view — appended nodes' rows are NOT
+        in it; `gather_features` is the mutation-aware read path."""
         return self._load("features")
 
     @property
     def degrees(self) -> np.ndarray:
-        return self._load("degrees")
+        own = self.__dict__.get("_own")
+        return own["degrees"] if own is not None else self._load("degrees")
 
     @property
     def labels(self) -> Optional[np.ndarray]:
-        return self._load("labels")
+        own = self.__dict__.get("_own")
+        return own["labels"] if own is not None else self._load("labels")
 
 
 def as_store(obj, *, warn: bool = False) -> GraphStore:

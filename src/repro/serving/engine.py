@@ -108,6 +108,7 @@ from repro.gnn.nai import (NAIConfig, infer_batch_host, make_compiled_infer,
                            support_stationary_factors)
 from repro.gnn.packing import (CB, PackedSupport, batch_bucket,
                                pack_support, step_active_blocks)
+from repro.gnn.propcache import PropCache
 from repro.gnn.sampler import sample_support
 from repro.gnn.store import as_store
 from repro.serving.faults import (InjectedFault, NaNGuardError,
@@ -136,6 +137,9 @@ class EngineConfig:
     donate: Optional[bool] = None    # operand donation (None = backend)
     latency_window: int = 4096       # LatencyRing capacity
     mesh: object = None              # mesh with a "data" axis, or None
+    # --- propagated-feature cache (repro.gnn.propcache; 0 = off) ---
+    cache_nodes: int = 0             # LRU capacity in cached nodes
+    cache_fill: bool = True          # insert batch-row series after serving
     # --- failure-domain isolation (all default off / no-op) ---
     faults: object = None            # FaultPlan schedule, or None
     watchdog_s: Optional[float] = None   # device-sync deadline, None = off
@@ -160,6 +164,13 @@ class EngineConfig:
         if self.mesh is not None and self.mode != "compiled":
             raise ValueError("sharded serving (mesh=) requires "
                              "mode='compiled'")
+        if self.cache_nodes < 0:
+            raise ValueError(f"cache_nodes must be >= 0, got "
+                             f"{self.cache_nodes}")
+        if self.cache_nodes and self.mode != "compiled":
+            raise ValueError("the propagated-feature cache fills from the "
+                             "compiled runner's series output; mode='host' "
+                             "has none")
         if self.max_wait_s < 0:
             raise ValueError(f"max_wait_s must be >= 0, got "
                              f"{self.max_wait_s}")
@@ -274,6 +285,8 @@ class _Inflight:
     host_s: float            # sample + pack wall time
     dispatch_s: float        # operand transfer + async dispatch wall time
     t_submit: float = 0.0    # wall clock at dispatch (watchdog anchor)
+    series_dev: object = None   # (T_max+1, nb, f) batch-row series future
+    fill: object = None      # cache fill record (nodes, deps, gv) or None
 
 
 class NAIServingEngine:
@@ -314,6 +327,16 @@ class NAIServingEngine:
         self.pipeline_depth = pipeline_depth
         self.queue: Deque[Request] = deque()
         self.stats = EngineStats(latencies=LatencyRing(ec.latency_window))
+        # propagated-feature cache (sharded: partitioned so each shard's
+        # cache holds rows its shard owns — see PropCache.n_shards)
+        self.cache: Optional[PropCache] = (
+            PropCache(ec.cache_nodes, nai.t_max, n_shards=self.n_shards)
+            if ec.cache_nodes else None)
+        self.cache_fill = ec.cache_fill
+        # SpMM row accounting: support rows sampled vs rows actually
+        # packed for device propagation (the cache's compute saving)
+        self.row_stats: Dict[str, int] = {"rows_support": 0,
+                                          "rows_packed": 0}
         # failure-domain isolation knobs (EngineConfig, all off by default)
         self.watchdog_s = ec.watchdog_s
         self.retry_failed = ec.retry_failed
@@ -322,13 +345,13 @@ class NAIServingEngine:
                         if ec.faults is not None else None)
         # compiled-path state: jitted runner + bucket high-water marks
         # keyed by padded batch size
-        # -> (s_bucket, tb_bucket, e_bucket, h_bucket, hb_bucket)
+        # -> (s_bucket, tb_bucket, e_bucket, h_bucket, hb_bucket, k_bucket)
         self.jit_stats: Dict[str, int] = {"compiles": 0, "hits": 0}
         self.pack_stats: Dict[str, int] = {"allocs": 0, "reuses": 0}
         # per-batch stage breakdown (host/dispatch/sync seconds), bounded
         self.batch_timings: Deque[Dict[str, float]] = deque(maxlen=1024)
         self._runner = None
-        self._bucket_hwm: Dict[int, Tuple[int, int, int, int, int]] = {}
+        self._bucket_hwm: Dict[int, Tuple[int, ...]] = {}
         self._seen_keys: set = set()
         self._inflight: Deque[_Inflight] = deque()
         # rotating pack-buffer pool: bucket -> pipeline_depth + 1 slots
@@ -343,7 +366,9 @@ class NAIServingEngine:
                 # for the engine's lifetime — build the per-operand
                 # NamedShardings once, off the per-batch dispatch path
                 logical = dict(operand_logical(self._backend,
-                                               self.gather_mode),
+                                               self.gather_mode,
+                                               seeds=self.cache
+                                               is not None),
                                x0=("row_shard", None),
                                x_inf=("row_shard", None))
                 self._shardings = {
@@ -353,7 +378,8 @@ class NAIServingEngine:
             self._runner = make_compiled_infer(
                 cfg, nai, spmm_impl=spmm_impl, interpret=ec.interpret,
                 donate=ec.donate, mesh=self.mesh,
-                gather_mode=self.gather_mode)
+                gather_mode=self.gather_mode,
+                return_series=self.cache is not None)
             self._cls_params = {
                 l: {k: jnp.asarray(v) for k, v in p.items()}
                 for l, p in params["cls"].items()}
@@ -366,6 +392,31 @@ class NAIServingEngine:
     def fault_stats(self) -> Optional[Dict]:
         """Per-stage injected-fault tallies (None without a FaultPlan)."""
         return self._faults.summary() if self._faults is not None else None
+
+    @property
+    def cache_stats(self) -> Dict[str, float]:
+        """Propagated-feature-cache counters (hits/misses/stale/fills/
+        evictions/hit_rate) merged with the engine's SpMM row accounting.
+        With the cache off only the row counters appear (and
+        rows_packed == rows_support)."""
+        d: Dict[str, float] = dict(self.row_stats)
+        if self.cache is not None:
+            d.update(self.cache.stats())
+        return d
+
+    def reset_stats(self) -> None:
+        """Zero the serving counters — request stats, per-batch timings,
+        row accounting, and the cache's hit/miss/fill counters — without
+        touching serving state (cache CONTENTS, pack pools, high-water
+        marks, and jit/pack structural counters all survive, so a warm
+        engine stays warm and steady-state compile accounting stays
+        meaningful across a reset)."""
+        self.stats = EngineStats(
+            latencies=LatencyRing(self.config.latency_window))
+        self.batch_timings.clear()
+        self.row_stats = {"rows_support": 0, "rows_packed": 0}
+        if self.cache is not None:
+            self.cache.reset_stats()
 
     def close(self) -> None:
         """Drain in-flight work, then release the store's OS resources
@@ -382,18 +433,27 @@ class NAIServingEngine:
                 if self._runner is not None else ())
 
     # ------------------------------------------------------- host stage
-    def _host_stage(self, nodes: np.ndarray
-                    ) -> Tuple[PackedSupport, Optional[np.ndarray]]:
+    def _host_stage(self, nodes: np.ndarray):
         """Sample the support and pack it into a pooled buffer set,
         plus the static per-step row-block predicate for the Pallas
         impls. `nodes` must be duplicate-free. Pure host work — no jax
         calls, and no full-graph arrays: everything reads through the
         store's row-gather view API, so an `MmapStore` only pages in the
-        support's rows."""
+        support's rows.
+
+        Returns ``(packed, step_active, fill)``: `fill` is the
+        propagated-feature-cache fill record (batch nodes, dependency
+        node set, mutation clock at sample time) for `_finalize_oldest`
+        to insert once the batch's series has synced — or None with the
+        cache off."""
         store, cfg, nai = self.store, self.cfg, self.nai
         be = self._backend
-        sup = sample_support(store, nodes, nai.t_max, cfg.r)
+        sup = sample_support(store, nodes, nai.t_max, cfg.r,
+                             cache=self.cache)
         nb = sup.n_batch
+        n_hit = int(sup.hit.sum()) if sup.hit is not None else 0
+        self.row_stats["rows_support"] += len(sup)
+        self.row_stats["rows_packed"] += len(sup) - n_hit
         x0 = store.gather_features(sup.nodes).astype(np.float32)
         # dense x_inf is built from the f32 factors so the fused kernel
         # (which streams the factors and multiplies in f32) is
@@ -409,7 +469,7 @@ class NAIServingEngine:
             x_inf = np.zeros((nb, 0), np.float32)
 
         nb_bucket = batch_bucket(nb, self.n_shards)
-        hwm = self._bucket_hwm.get(nb_bucket, (0, 0, 0, 0, 0))
+        hwm = self._bucket_hwm.get(nb_bucket, (0, 0, 0, 0, 0, 0))
         slots = self._pack_pool.setdefault(
             nb_bucket, [None] * (self.pipeline_depth + 1))
         idx = self._pool_idx.get(nb_bucket, 0)
@@ -422,14 +482,19 @@ class NAIServingEngine:
                               if be.uses_factors else None,
                               out=slots[idx], n_shards=self.n_shards,
                               halo=self.gather_mode != "dense",
-                              h_bucket=hwm[3], hb_bucket=hwm[4])
+                              h_bucket=hwm[3], hb_bucket=hwm[4],
+                              seeds=(sup.hit, sup.seed_vals)
+                              if self.cache is not None else None,
+                              k_bucket=hwm[5])
         slots[idx] = packed
         self._pool_idx[nb_bucket] = (idx + 1) % len(slots)
         self.pack_stats["reuses" if packed.reused else "allocs"] += 1
         self._bucket_hwm[nb_bucket] = (
             max(hwm[0], packed.n_pad), max(hwm[1], packed.tiles.shape[1]),
             max(hwm[2], packed.src.shape[-1]),
-            max(hwm[3], packed.n_halo_pad), max(hwm[4], packed.halo_send_pad))
+            max(hwm[3], packed.n_halo_pad),
+            max(hwm[4], packed.halo_send_pad),
+            max(hwm[5], packed.seed_pad))
         if self.mesh is not None:
             # per-step exchange footprint (structural: what the compiled
             # gather materializes vs the true boundary vs dense S_pad)
@@ -452,7 +517,12 @@ class NAIServingEngine:
             self.jit_stats["compiles"] += 1
         step_active = (step_active_blocks(packed.hop_rb, nai.t_max)
                        if be.uses_tiles else None)
-        return packed, step_active
+        fill = None
+        if self.cache is not None and self.cache_fill:
+            # the full support node set is the conservative dependency
+            # cone of every batch row's series (see PropCache.fill)
+            fill = (nodes, sup.nodes, sup.graph_version)
+        return packed, step_active, fill
 
     # ----------------------------------------------------- device stage
     def _device_stage(self, packed: PackedSupport,
@@ -481,7 +551,10 @@ class NAIServingEngine:
             operands = {k: jnp.asarray(v) for k, v in operands.items()}
             x0 = jnp.asarray(packed.x0)
             x_inf = jnp.asarray(packed.x_inf)
-        return self._runner(self._cls_params, operands, x0, x_inf)
+        out = self._runner(self._cls_params, operands, x0, x_inf)
+        # with the cache on, the runner also returns the batch-row series
+        # (the fill source); pad the cache-off path to the same arity
+        return out if self.cache is not None else (*out, None)
 
     def _watchdog_sync(self, fl: _Inflight) -> None:
         """Bound the device sync: poll `is_ready` until the results are
@@ -577,6 +650,16 @@ class NAIServingEngine:
             self._guard_results(preds_a, orders_a, fl.nb_real)
         except Exception as e:   # noqa: BLE001 — batch-level isolation
             return self._fail_batch(fl.requests, e)
+        if fl.fill is not None:
+            # fill only after the guards pass — a poisoned/hung batch
+            # must not seed future batches. Steps 1..T_max of a batch
+            # row are exact global values (hop 0, full budget), so the
+            # whole series is insertable.
+            batch_nodes, dep_nodes, gv = fl.fill
+            series = np.asarray(fl.series_dev)
+            self.cache.fill(
+                self.store, batch_nodes,
+                series[1:, :fl.nb_real].transpose(1, 0, 2), dep_nodes, gv)
         preds = preds_a[:fl.nb_real][fl.inv]
         orders = orders_a[:fl.nb_real][fl.inv]
         done = time.perf_counter()
@@ -724,12 +807,13 @@ class NAIServingEngine:
         t0 = time.perf_counter()
         try:
             self._inject_host_faults()
-            packed, step_active = self._host_stage(uniq)
+            packed, step_active, fill = self._host_stage(uniq)
             t1 = time.perf_counter()
             if (self._faults is not None
                     and self._faults.fire("device") is not None):
                 raise InjectedFault("injected device-stage failure")
-            preds_dev, orders_dev = self._device_stage(packed, step_active)
+            preds_dev, orders_dev, series_dev = self._device_stage(
+                packed, step_active)
             preds_dev, orders_dev = poison_results(self._faults,
                                                    preds_dev, orders_dev)
         except Exception as e:   # noqa: BLE001 — batch-level isolation:
@@ -740,7 +824,8 @@ class NAIServingEngine:
         t2 = time.perf_counter()
         self._inflight.append(
             _Inflight(batch, inv, packed.nb_real, preds_dev, orders_dev,
-                      host_s=t1 - t0, dispatch_s=t2 - t1, t_submit=t2))
+                      host_s=t1 - t0, dispatch_s=t2 - t1, t_submit=t2,
+                      series_dev=series_dev, fill=fill))
         done: List[Request] = []
         while len(self._inflight) >= self.pipeline_depth:
             done += self._finalize_oldest()

@@ -54,8 +54,7 @@ from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.gnn.nai import NAIConfig
-from repro.serving.engine import (EngineConfig, EngineStats, LatencyRing,
-                                  NAIServingEngine, Request)
+from repro.serving.engine import (EngineConfig, NAIServingEngine, Request)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -428,14 +427,14 @@ class ServingFrontend:
             eng.close()
 
     def reset_stats(self) -> None:
-        """Zero the per-class counters and per-engine latency stats
-        (bench warm-up boundary). Compile caches, pack pools, and
-        high-water marks are deliberately kept — steady state is the
-        point of resetting."""
+        """Zero the per-class counters and per-engine serving stats
+        (bench warm-up boundary) through each engine's own
+        `reset_stats` — request stats, timings, row accounting, and
+        feature-cache counters. Compile caches, pack pools, cache
+        CONTENTS, and high-water marks are deliberately kept — steady
+        state is the point of resetting."""
         for name, eng in self.engines.items():
-            eng.stats = EngineStats(
-                latencies=LatencyRing(eng.stats.latencies.capacity))
-            eng.batch_timings.clear()
+            eng.reset_stats()
             self.stats[name] = ClassStats()
 
     def summary(self) -> Dict[str, Dict[str, float]]:

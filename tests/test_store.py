@@ -105,6 +105,28 @@ def test_as_store_memoizes_and_warns_on_graph(setup):
         as_store(g, warn=True)
     with pytest.raises(TypeError):
         as_store(np.arange(3))
+    # the memoized wrap is bit-identical to a fresh zero-copy wrap
+    fresh = InMemoryStore(g)
+    assert s1.features is g.features is fresh.features
+    np.testing.assert_array_equal(s1.row_ptr, fresh.row_ptr)
+    np.testing.assert_array_equal(s1.col_idx, fresh.col_idx)
+    np.testing.assert_array_equal(s1.degrees, fresh.degrees)
+    assert s1.num_edges == fresh.num_edges
+    # under the stdlib "default" filter the shim warns exactly once PER
+    # CALL SITE: repeated calls from one site are registry-deduped, a
+    # second site warns again (stacklevel points at the caller)
+    nodes = g.test_idx[:8]
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("default")
+        for _ in range(3):
+            sample_support(g, nodes, 1, 0.5)     # site A, three calls
+        deps = [w for w in rec
+                if issubclass(w.category, DeprecationWarning)]
+        assert len(deps) == 1
+        sample_support(g, nodes, 1, 0.5)         # site B
+        deps = [w for w in rec
+                if issubclass(w.category, DeprecationWarning)]
+        assert len(deps) == 2
 
 
 def test_sampler_accepts_store_and_matches_graph_shim(setup):
