@@ -50,7 +50,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import os
 import sys
 import time
@@ -63,7 +62,7 @@ if __package__ in (None, ""):     # `python benchmarks/chaos_bench.py`
 import jax
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, write_bench_json
 from repro.gnn import GNNConfig, init_classifiers, load_dataset
 from repro.gnn.nai import NAIConfig
 from repro.gnn.store import as_store
@@ -325,6 +324,86 @@ def _scenarios(smoke: bool) -> List[Dict]:
     ]
 
 
+def _checkpoint_corrupt(smoke: bool) -> Dict:
+    """Offline-driver chaos: corrupt a COMMITTED checkpoint of a
+    preempted full-graph inference run, and separately crash a
+    checkpoint write mid-commit (`ckpt_write` fault stage), then
+    resume. Gates: the resume falls back to an earlier verifiable
+    superstep, detection is typed (counted in `corrupt_steps` /
+    `ckpt_write_failures`), and the final predictions and exit orders
+    stay bit-identical to an uninterrupted run. Lives under its own
+    payload key — the `scenarios` table is the serving front-end's."""
+    import tempfile
+
+    from repro.gnn.models import init_classifiers as _init_cls
+    from repro.gnn.store import make_graph
+    from repro.launch.full_graph_infer import (
+        OfflineConfig, PreemptionSimulated, first_step_distance_quantile,
+        run_full_graph_infer)
+
+    t0 = time.time()
+    n = 800 if smoke else 2000
+    t_max = 3
+    store = make_graph(n, avg_deg=6.0, alpha=2.2, seed=7, path=None,
+                       feat_dim=24, num_classes=5)
+    t_s = first_step_distance_quantile(store, 0.5, 0.5)
+    cfg = GNNConfig("sgc", store.feat_dim, store.num_classes, k=t_max,
+                    r=0.5, hidden=16, mlp_layers=2)
+    params = {"cls": _init_cls(cfg, jax.random.PRNGKey(0))}
+    nai = NAIConfig(t_s=t_s, t_min=1, t_max=t_max)
+
+    def _go(ck, **kw):
+        plan = kw.pop("fault_plan", None)
+        return run_full_graph_infer(store, cfg, params, nai,
+                                    OfflineConfig(ckpt_dir=ck, **kw),
+                                    fault_plan=plan)
+
+    with tempfile.TemporaryDirectory() as d:
+        ref = _go(os.path.join(d, "clean"))
+
+        # 1. byte-flip a committed step payload; resume must fall back
+        ck = os.path.join(d, "flip")
+        try:
+            _go(ck, crash_after=2)
+        except PreemptionSimulated:
+            pass
+        path = os.path.join(ck, "step_00002", "x.npy")
+        with open(path, "r+b") as fh:
+            fh.seek(os.path.getsize(path) // 2)
+            b = fh.read(1)
+            fh.seek(-1, 1)
+            fh.write(bytes([b[0] ^ 0xFF]))
+        flip = _go(ck)
+        flip_rec = {
+            "resumed_from": flip.stats["resumed_from"],
+            "corrupt_steps": flip.stats["corrupt_steps"],
+            "parity": bool(
+                np.array_equal(flip.predictions, ref.predictions)
+                and np.array_equal(flip.exit_orders, ref.exit_orders)),
+        }
+
+        # 2. ckpt_write fault (payloads written, manifest not
+        #    committed), then preemption: resume from the last step
+        #    that DID commit
+        ck = os.path.join(d, "wfault")
+        plan = FaultPlan([FaultSpec("ckpt_write", at=(2,))], seed=21)
+        try:
+            _go(ck, crash_after=t_max, fault_plan=plan)
+        except PreemptionSimulated:
+            pass
+        wf = _go(ck)
+        write_rec = {
+            "resumed_from": wf.stats["resumed_from"],
+            "fell_back": wf.stats["resumed_from"] < t_max,
+            "parity": bool(
+                np.array_equal(wf.predictions, ref.predictions)
+                and np.array_equal(wf.exit_orders, ref.exit_orders)),
+        }
+    return {"n": n, "t_max": t_max, "byte_flip": flip_rec,
+            "write_fault": write_rec,
+            "wall_s": round(time.time() - t0, 3)}
+
+
 def collect(smoke: bool = False) -> Dict:
     g, cfg, params, nai = _setup(smoke)
     payload: Dict = {
@@ -344,6 +423,12 @@ def collect(smoke: bool = False) -> Dict:
               f"failed={payload['scenarios'][name]['totals']['failed']} "
               f"wall={payload['scenarios'][name]['wall_s']}s",
               flush=True)
+    payload["checkpoint_corrupt"] = _checkpoint_corrupt(smoke)
+    cc = payload["checkpoint_corrupt"]
+    print(f"# checkpoint_corrupt: flip_parity="
+          f"{cc['byte_flip']['parity']} "
+          f"write_parity={cc['write_fault']['parity']} "
+          f"wall={cc['wall_s']}s", flush=True)
     clean = payload["scenarios"]["clean"]["goodput_frac"]
     base = payload["scenarios"]["baseline"]["goodput_frac"]
     payload["goodput_gate"] = {
@@ -420,6 +505,27 @@ def check(payload: Dict) -> List[str]:
         errs.append(f"baseline goodput {gate['baseline']:.3f} fell "
                     f"below {gate['min_ratio']} of clean "
                     f"{gate['clean']:.3f}")
+
+    cc = payload.get("checkpoint_corrupt")
+    if cc is not None:
+        flip, wf = cc["byte_flip"], cc["write_fault"]
+        if not flip["parity"]:
+            errs.append("checkpoint_corrupt/byte_flip: resumed run "
+                        "diverged from the uninterrupted one")
+        if flip["corrupt_steps"] < 1:
+            errs.append("checkpoint_corrupt/byte_flip: the flipped "
+                        "payload was never detected as corrupt")
+        if flip["resumed_from"] >= 2:
+            errs.append(f"checkpoint_corrupt/byte_flip: resume did not "
+                        f"fall back past the corrupt superstep "
+                        f"(resumed_from={flip['resumed_from']})")
+        if not wf["parity"]:
+            errs.append("checkpoint_corrupt/write_fault: resumed run "
+                        "diverged from the uninterrupted one")
+        if not wf["fell_back"]:
+            errs.append("checkpoint_corrupt/write_fault: the crashed "
+                        "manifest commit did not force an earlier "
+                        "resume point")
     return errs
 
 
@@ -440,6 +546,15 @@ def _rows(payload: Dict) -> List[str]:
         f"parity_fault_free={st['parity_fault_free']};"
         f"trace_requests={st['trace_requests']};"
         f"breaker_transitions={st['breaker_transitions']}"))
+    cc = payload.get("checkpoint_corrupt")
+    if cc is not None:
+        rows.append(csv_row(
+            "chaos/checkpoint_corrupt", 1e6 * cc["wall_s"],
+            f"flip_parity={cc['byte_flip']['parity']};"
+            f"flip_resumed_from={cc['byte_flip']['resumed_from']};"
+            f"corrupt_steps={cc['byte_flip']['corrupt_steps']};"
+            f"write_parity={cc['write_fault']['parity']};"
+            f"write_resumed_from={cc['write_fault']['resumed_from']}"))
     return rows
 
 
@@ -469,16 +584,8 @@ def main() -> None:
         out_path, merge = "BENCH_chaos_smoke.json", False
     else:
         out_path, merge = "BENCH_serving.json", True
-    if merge and os.path.exists(out_path):
-        with open(out_path) as fh:
-            doc = json.load(fh)
-        doc["chaos"] = payload
-    else:
-        doc = payload
-    with open(out_path, "w") as fh:
-        json.dump(doc, fh, indent=2)
-        fh.write("\n")
-    print(f"# wrote {out_path}")
+    write_bench_json(out_path, payload,
+                     section="chaos" if merge else None)
     if args.check:
         errs = check(payload)
         for e in errs:

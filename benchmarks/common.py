@@ -80,3 +80,56 @@ def zipf_requests(ids: np.ndarray, n_requests: int, *,
     p = np.arange(1, len(ids) + 1, dtype=np.float64) ** -exponent
     p /= p.sum()
     return rng.choice(ranked, size=n_requests, p=p)
+
+
+# Sections that sub-benches merge into the combined BENCH_serving.json.
+# serving_bench owns the top-level keys; each sub-bench owns ONE section.
+BENCH_SECTIONS = ("frontend", "chaos", "cache", "sharded", "graph_scale",
+                  "offline")
+
+
+def write_bench_json(out_path: str, payload: dict, *,
+                     section: str | None = None) -> dict:
+    """Write a benchmark record, preserving sibling sections.
+
+    The combined BENCH_serving.json is written by several benches:
+    serving_bench owns the top-level document, while frontend/chaos/
+    cache/offline benches each own one section key (`BENCH_SECTIONS`).
+    Before this helper, each bench re-implemented "read the previous
+    file, graft my section, keep everyone else's" with slightly
+    different error handling — this is the single copy.
+
+    section=None: `payload` IS the document; any known section present
+    in the existing file but absent from `payload` is carried over so
+    regenerating the top-level record never drops a sub-bench's data.
+    section="x": the existing document (or {} when the file is missing
+    or unreadable) gets `doc[section] = payload`.
+
+    Returns the document written.
+    """
+    import json
+    import os
+    doc: dict = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as fh:
+                doc = json.load(fh)
+            if not isinstance(doc, dict):
+                doc = {}
+        except (json.JSONDecodeError, OSError):
+            doc = {}
+    if section is None:
+        for key in BENCH_SECTIONS:
+            if key in doc and key not in payload:
+                payload[key] = doc[key]
+        doc = payload
+    else:
+        if section not in BENCH_SECTIONS:
+            raise ValueError(f"unknown bench section {section!r} "
+                             f"(known: {BENCH_SECTIONS})")
+        doc[section] = payload
+    with open(out_path, "w") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
+    print(f"# wrote {out_path}")
+    return doc

@@ -52,7 +52,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import os
 import sys
 import time
@@ -66,7 +65,7 @@ if __package__ in (None, ""):     # `python benchmarks/frontend_bench.py`
 import jax
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, write_bench_json
 from repro.gnn import GNNConfig, init_classifiers, load_dataset
 from repro.gnn.nai import NAIConfig
 from repro.serving import NAIServingEngine, ServingFrontend, SLOClass
@@ -521,16 +520,8 @@ def main() -> None:
         out_path, merge = "BENCH_frontend_smoke.json", False
     else:
         out_path, merge = "BENCH_serving.json", True
-    if merge and os.path.exists(out_path):
-        with open(out_path) as fh:
-            doc = json.load(fh)
-        doc["frontend"] = payload
-    else:
-        doc = payload
-    with open(out_path, "w") as fh:
-        json.dump(doc, fh, indent=2)
-        fh.write("\n")
-    print(f"# wrote {out_path}")
+    write_bench_json(out_path, payload,
+                     section="frontend" if merge else None)
     cmp_ = payload["open_loop"]["highest_load_comparison"]
     if not cmp_["pipelined_ge_serial"]:
         # timing-dependent, so advisory (a contended runner can flip it);

@@ -1,0 +1,338 @@
+"""Offline full-graph inference bench: checkpointed superstep driver
+under preemption, at graph scale.
+
+Every driver run is a REAL CLI subprocess (`python -m
+repro.launch.full_graph_infer`) over an on-disk `MmapStore`, with
+``XLA_FLAGS=--xla_force_host_platform_device_count=D`` set per child —
+the parent never forces devices. Scenarios:
+
+* **clean** — one uninterrupted run; the reference outputs and the
+  throughput/overhead columns (nodes/sec, node-steps/sec, checkpoint
+  overhead fraction, checkpoint bytes, exit histogram).
+* **kill_sweep** — for every superstep k, a run preempted right after
+  committing k (``--crash-after``, exit code 17) then rerun; gates
+  ``resumed_from == k`` and bit-parity with clean.
+* **sigkill** — a run SIGKILLed mid-flight (the parent polls the
+  checkpoint directory and kills as soon as step 0 commits, while the
+  superstep compile is still in progress) then rerun; gates that the
+  kill landed mid-run and the resume is bit-parity with clean.
+* **corrupt** — a committed checkpoint payload byte-flipped between
+  preemption and resume; gates typed detection (corrupt_steps >= 1),
+  fallback one superstep, and bit-parity.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.full_graph_infer_bench
+        [--smoke] [--check] [--shards D] [--n N] [--out F]
+
+Full runs merge the payload under the ``"offline"`` key of
+``BENCH_serving.json`` (≥1e5-node store, D≥2, enforced by ``--check``);
+``--smoke`` writes a standalone (gitignored)
+``BENCH_offline_smoke.json``. Parity is always exact equality of the
+result arrays — never a tolerance.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+if __package__ in (None, ""):   # `python benchmarks/full_graph_infer_bench.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [_root, os.path.join(_root, "src")]
+
+import numpy as np
+
+from benchmarks.common import csv_row, write_bench_json
+
+T_MAX = 3
+EXIT_PREEMPTED = 17     # mirrors repro.launch.full_graph_infer
+
+
+def _env(shards: int) -> Dict[str, str]:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{max(shards, 1)}")
+    return env
+
+
+def _gen_store(path: str, n: int, feat: int, classes: int,
+               shards: int) -> None:
+    code = ("import sys; from repro.gnn.store import make_graph; "
+            "make_graph(int(sys.argv[2]), avg_deg=6.0, alpha=2.2, "
+            "seed=5, path=sys.argv[1], feat_dim=int(sys.argv[3]), "
+            "num_classes=int(sys.argv[4]))")
+    subprocess.run([sys.executable, "-c", code, path, str(n),
+                    str(feat), str(classes)], env=_env(1), check=True)
+
+
+def _base_cmd(store: str, shards: int) -> List[str]:
+    return [sys.executable, "-m", "repro.launch.full_graph_infer",
+            "--store", store, "--shards", str(shards),
+            "--gather", "alltoall", "--t-max", str(T_MAX),
+            "--t-s-quantile", "0.5"]
+
+
+def _run_cli(cmd: List[str], shards: int, *,
+             expect: int = 0) -> Dict:
+    t0 = time.time()
+    p = subprocess.run(cmd, env=_env(shards), capture_output=True,
+                       text=True, timeout=3600)
+    wall = time.time() - t0
+    if p.returncode != expect:
+        raise RuntimeError(
+            f"driver exited {p.returncode} (expected {expect}):\n"
+            f"{p.stdout}\n{p.stderr}")
+    summary: Optional[Dict] = None
+    for line in p.stdout.splitlines():
+        if line.startswith("OFFLINE_SUMMARY "):
+            summary = json.loads(line[len("OFFLINE_SUMMARY "):])
+    return {"wall_s": round(wall, 3), "returncode": p.returncode,
+            "summary": summary}
+
+
+def _result_arrays(ckpt: str) -> Dict[str, np.ndarray]:
+    return {name: np.load(os.path.join(ckpt, "result", name + ".npy"))
+            for name in ("predictions", "exit_orders")}
+
+
+def _parity(ckpt_a: str, ckpt_b: str) -> bool:
+    a, b = _result_arrays(ckpt_a), _result_arrays(ckpt_b)
+    return bool(
+        np.array_equal(a["predictions"], b["predictions"])
+        and np.array_equal(a["exit_orders"], b["exit_orders"]))
+
+
+def _sigkill_run(cmd: List[str], ckpt: str, shards: int) -> int:
+    """Launch the driver, SIGKILL it as soon as the step-0 payload dir
+    appears (the superstep compile still ahead of it), return the
+    (negative) returncode. Falls through with the real code if the run
+    finished before the kill landed."""
+    p = subprocess.Popen(cmd, env=_env(shards),
+                         stdout=subprocess.DEVNULL,
+                         stderr=subprocess.DEVNULL)
+    trigger = os.path.join(ckpt, "step_00000")
+    deadline = time.time() + 3600
+    while p.poll() is None and time.time() < deadline:
+        if os.path.isdir(trigger):
+            p.send_signal(signal.SIGKILL)
+            break
+        time.sleep(0.002)
+    p.wait(timeout=600)
+    return p.returncode
+
+
+def _flip_byte(path: str) -> None:
+    with open(path, "r+b") as fh:
+        fh.seek(os.path.getsize(path) // 2)
+        b = fh.read(1)
+        fh.seek(-1, 1)
+        fh.write(bytes([b[0] ^ 0xFF]))
+
+
+def collect(smoke: bool = False, *, shards: int = 2,
+            n: Optional[int] = None) -> Dict:
+    n = n or (4000 if smoke else 100_000)
+    feat, classes = (24, 5) if smoke else (32, 10)
+    payload: Dict = {"smoke": bool(smoke), "n": n, "shards": shards,
+                     "t_max": T_MAX, "feat_dim": feat,
+                     "impl": "segment", "gather_mode": "alltoall",
+                     "scenarios": {}}
+    with tempfile.TemporaryDirectory() as d:
+        store = os.path.join(d, "store")
+        _gen_store(store, n, feat, classes, shards)
+        base = _base_cmd(store, shards)
+
+        # ------------------------------------------------------- clean
+        ck_clean = os.path.join(d, "ck_clean")
+        clean = _run_cli(base + ["--ckpt", ck_clean], shards)
+        payload["scenarios"]["clean"] = clean
+        print(f"# clean: wall={clean['wall_s']}s nodes_per_s="
+              f"{clean['summary']['nodes_per_s']:.0f}", flush=True)
+
+        # -------------------------------------------------- kill sweep
+        sweep = []
+        for k in range(T_MAX):
+            ck = os.path.join(d, f"ck_kill{k}")
+            _run_cli(base + ["--ckpt", ck, "--crash-after", str(k)],
+                     shards, expect=EXIT_PREEMPTED)
+            res = _run_cli(base + ["--ckpt", ck], shards)
+            sweep.append({
+                "crash_after": k, "wall_s": res["wall_s"],
+                "resumed_from": res["summary"]["resumed_from"],
+                "supersteps_run": res["summary"]["supersteps_run"],
+                "parity": _parity(ck, ck_clean)})
+            print(f"# kill_sweep k={k}: resumed_from="
+                  f"{sweep[-1]['resumed_from']} "
+                  f"parity={sweep[-1]['parity']}", flush=True)
+        payload["scenarios"]["kill_sweep"] = sweep
+
+        # ----------------------------------------------------- sigkill
+        ck = os.path.join(d, "ck_sigkill")
+        rc = _sigkill_run(base + ["--ckpt", ck], ck, shards)
+        res = _run_cli(base + ["--ckpt", ck], shards)
+        payload["scenarios"]["sigkill"] = {
+            "killed_returncode": rc, "killed_mid_run": rc != 0,
+            "resume_wall_s": res["wall_s"],
+            "resumed_from": res["summary"]["resumed_from"],
+            "parity": _parity(ck, ck_clean)}
+        print(f"# sigkill: rc={rc} resumed_from="
+              f"{res['summary']['resumed_from']} "
+              f"parity={payload['scenarios']['sigkill']['parity']}",
+              flush=True)
+
+        # ----------------------------------------------------- corrupt
+        ck = os.path.join(d, "ck_corrupt")
+        _run_cli(base + ["--ckpt", ck, "--crash-after", "2"], shards,
+                 expect=EXIT_PREEMPTED)
+        _flip_byte(os.path.join(ck, "step_00002", "x.npy"))
+        res = _run_cli(base + ["--ckpt", ck], shards)
+        payload["scenarios"]["corrupt"] = {
+            "wall_s": res["wall_s"],
+            "resumed_from": res["summary"]["resumed_from"],
+            "corrupt_steps": res["summary"]["corrupt_steps"],
+            "parity": _parity(ck, ck_clean)}
+        print(f"# corrupt: resumed_from="
+              f"{res['summary']['resumed_from']} corrupt_steps="
+              f"{res['summary']['corrupt_steps']} "
+              f"parity={payload['scenarios']['corrupt']['parity']}",
+              flush=True)
+    return payload
+
+
+# ------------------------------------------------------------- gating
+def check(payload: Dict) -> List[str]:
+    errs: List[str] = []
+    sc = payload["scenarios"]
+    s = sc["clean"]["summary"]
+    if s is None:
+        errs.append("clean: no OFFLINE_SUMMARY line in driver output")
+        return errs
+    if s["supersteps_run"] != payload["t_max"]:
+        errs.append(f"clean: ran {s['supersteps_run']} supersteps, "
+                    f"expected {payload['t_max']}")
+    hist = s["exit_histogram"]
+    if sum(hist) != payload["n"]:
+        errs.append(f"clean: exit histogram sums to {sum(hist)}, "
+                    f"not n={payload['n']}")
+    if s["ckpt_bytes"] <= 0:
+        errs.append("clean: no checkpoint bytes recorded")
+    for rec in sc["kill_sweep"]:
+        if rec["resumed_from"] != rec["crash_after"]:
+            errs.append(f"kill_sweep k={rec['crash_after']}: resumed "
+                        f"from {rec['resumed_from']}, not the committed "
+                        f"superstep")
+        if rec["supersteps_run"] != payload["t_max"] - rec["crash_after"]:
+            errs.append(f"kill_sweep k={rec['crash_after']}: recomputed "
+                        f"{rec['supersteps_run']} supersteps instead of "
+                        f"{payload['t_max'] - rec['crash_after']}")
+        if not rec["parity"]:
+            errs.append(f"kill_sweep k={rec['crash_after']}: resumed "
+                        f"run diverged from the uninterrupted one")
+    sk = sc["sigkill"]
+    if not sk["killed_mid_run"]:
+        errs.append("sigkill: the run finished before the kill landed "
+                    "— nothing was exercised")
+    if not sk["parity"]:
+        errs.append("sigkill: resumed run diverged from the "
+                    "uninterrupted one")
+    co = sc["corrupt"]
+    if co["corrupt_steps"] < 1:
+        errs.append("corrupt: the flipped payload was never detected")
+    if co["resumed_from"] >= 2:
+        errs.append(f"corrupt: resume did not fall back past the "
+                    f"corrupt superstep (resumed_from="
+                    f"{co['resumed_from']})")
+    if not co["parity"]:
+        errs.append("corrupt: resumed run diverged from the "
+                    "uninterrupted one")
+    if not payload["smoke"]:
+        if payload["n"] < 100_000:
+            errs.append(f"full mode requires a >=1e5-node store, "
+                        f"got n={payload['n']}")
+        if payload["shards"] < 2:
+            errs.append(f"full mode requires >=2 shards, got "
+                        f"{payload['shards']}")
+    return errs
+
+
+def _rows(payload: Dict) -> List[str]:
+    s = payload["scenarios"]["clean"]["summary"]
+    rows = [csv_row(
+        f"offline/clean_n{payload['n']}_d{payload['shards']}",
+        1e6 * payload["scenarios"]["clean"]["wall_s"],
+        f"nodes_per_s={s['nodes_per_s']:.0f};"
+        f"node_steps_per_s={s['node_steps_per_s']:.0f};"
+        f"ckpt_overhead_frac={s['ckpt_overhead_frac']:.4f};"
+        f"ckpt_bytes={s['ckpt_bytes']};"
+        f"exit_histogram={'/'.join(map(str, s['exit_histogram']))}")]
+    for rec in payload["scenarios"]["kill_sweep"]:
+        rows.append(csv_row(
+            f"offline/kill_after_{rec['crash_after']}",
+            1e6 * rec["wall_s"],
+            f"resumed_from={rec['resumed_from']};"
+            f"supersteps_run={rec['supersteps_run']};"
+            f"parity={rec['parity']}"))
+    sk = payload["scenarios"]["sigkill"]
+    rows.append(csv_row(
+        "offline/sigkill", 1e6 * sk["resume_wall_s"],
+        f"killed_mid_run={sk['killed_mid_run']};"
+        f"resumed_from={sk['resumed_from']};parity={sk['parity']}"))
+    co = payload["scenarios"]["corrupt"]
+    rows.append(csv_row(
+        "offline/corrupt", 1e6 * co["wall_s"],
+        f"resumed_from={co['resumed_from']};"
+        f"corrupt_steps={co['corrupt_steps']};parity={co['parity']}"))
+    return rows
+
+
+def run() -> list:
+    return _rows(collect(smoke=True))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small store / short runs (CI smoke job)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero on a parity/resume/detection "
+                         "gate failure")
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--n", type=int, default=None,
+                    help="store size (default 4000 smoke / 100000 full)")
+    ap.add_argument("--out", default="",
+                    help="JSON output path (default: merge under the "
+                         "'offline' key of BENCH_serving.json; with "
+                         "--smoke, standalone BENCH_offline_smoke.json)")
+    args = ap.parse_args()
+    payload = collect(smoke=args.smoke, shards=args.shards, n=args.n)
+    print("name,us_per_call,derived")
+    for r in _rows(payload):
+        print(r, flush=True)
+    if args.out:
+        out_path, merge = args.out, args.out == "BENCH_serving.json"
+    elif args.smoke:
+        out_path, merge = "BENCH_offline_smoke.json", False
+    else:
+        out_path, merge = "BENCH_serving.json", True
+    write_bench_json(out_path, payload,
+                     section="offline" if merge else None)
+    if args.check:
+        errs = check(payload)
+        for e in errs:
+            print(f"CHECK FAIL: {e}", file=sys.stderr)
+        if errs:
+            sys.exit(1)
+        print("# all offline gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,7 @@ from benchmarks.common import csv_row
 from repro.gnn import load_dataset
 from repro.gnn.packing import pack_support, step_active_blocks
 from repro.gnn.sampler import sample_support
+from repro.gnn.store import as_store
 from repro.kernels.nap_step import fused_step, two_launch_step
 from repro.kernels.spmm import (CB, FB, RB, build_block_ell, pad_features,
                                 spmm, spmm_block_ell)
@@ -200,7 +201,7 @@ def _support_rows(rng, smoke: bool) -> List[Row]:
     batch = rng.choice(g.test_idx, size=16 if smoke else 32, replace=False)
     t_max = 2
     t0 = time.perf_counter()
-    sup = sample_support(g, batch, t_max, 0.5)
+    sup = sample_support(as_store(g), batch, t_max, 0.5)
     sample_us = 1e6 * (time.perf_counter() - t0)
     x0 = g.features[sup.nodes][:, :FB].astype(np.float32)
     t0 = time.perf_counter()

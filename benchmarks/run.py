@@ -18,7 +18,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: table3,table5,table6,table7,fig2,fig3,"
                          "roofline,kernels,ablation,serving,"
-                         "serving_sharded,frontend,chaos")
+                         "serving_sharded,frontend,chaos,offline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -70,6 +70,9 @@ def main() -> None:
     if only is None or "chaos" in only:
         from benchmarks.chaos_bench import run as cb
         suites.append(("chaos", cb))
+    if only is None or "offline" in only:
+        from benchmarks.full_graph_infer_bench import run as ob
+        suites.append(("offline", ob))
 
     print("name,us_per_call,derived")
     failures = 0

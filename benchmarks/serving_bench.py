@@ -81,7 +81,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import os
 import sys
 import time
@@ -95,7 +94,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, write_bench_json
 from repro.gnn import GNNConfig, init_classifiers, load_dataset
 from repro.gnn.nai import (NAIConfig, infer_batch_masked,
                            support_stationary_factors)
@@ -931,24 +930,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in _rows(payload):
         print(r, flush=True)
-    # frontend_bench and chaos_bench merge their sections into this
-    # file; carry them — and any section this invocation's flags did
-    # not regenerate — across rewrites so regenerating the serving
-    # record never drops them
-    if os.path.exists(out_path):
-        try:
-            with open(out_path) as fh:
-                prev = json.load(fh)
-            for key in ("frontend", "chaos", "cache", "sharded",
-                        "graph_scale"):
-                if key in prev and key not in payload:
-                    payload[key] = prev[key]
-        except (json.JSONDecodeError, OSError):
-            pass
-    with open(out_path, "w") as fh:
-        json.dump(payload, fh, indent=2)
-        fh.write("\n")
-    print(f"# wrote {out_path}")
+    # sub-benches (frontend/chaos/cache/offline) merge their sections
+    # into this file; write_bench_json carries them — and any section
+    # this invocation's flags did not regenerate — across rewrites
+    write_bench_json(out_path, payload)
     # timing-dependent, so advisory only (never a CI failure: a contended
     # runner can flip a few-percent comparison) — the committed
     # full-size BENCH_serving.json is the record of the pipelining win

@@ -419,6 +419,115 @@ def _halo_gather(gather_mode: str, halo: dict, rows_loc: int):
     return gather
 
 
+def make_superstep(backend: PropagationBackend, nai, *, n_batch: int,
+                   n_rows: int, interpret: bool = True, mesh=None,
+                   gather_mode: str = "dense"):
+    """One NAP propagation step as its own jitted callable — the unit
+    of work of the offline full-graph driver
+    (`repro.launch.full_graph_infer`), which checkpoints state between
+    steps instead of running the whole fori-loop in one dispatch.
+
+    Returns ``step(operands, x, exit_order, l) -> (x_new, exit_order)``
+    replicating EXACTLY one iteration of `_masked_loop`'s body — the
+    same threshold-sentinel T_min/T_max gating, the same row-block
+    predicate (``step_active[l-1] * live``), the same exit-order
+    update — so a chain of superstep calls from the same initial state
+    is bit-identical to itself across interruption/resume (the driver's
+    parity contract). The loop carry's ``live`` flag is recovered from
+    the incoming ``exit_order`` (any batch row still at 0, psum-reduced
+    across shards), which equals the value the fori-loop would carry in
+    from the previous iteration. ``l`` is a traced int32 scalar, so ONE
+    compilation serves every superstep of a run.
+
+    Sharding follows `run_propagation`'s contract: with a mesh whose
+    ``data`` axis is D > 1, operands must come from
+    ``pack_support(n_shards=D)`` (plus halo metadata for non-dense
+    ``gather_mode``), `x`/`exit_order` are in shard-major packed order,
+    and outputs come back global in the same order. Cache-seed operands
+    are not supported here (the offline driver packs without them).
+    """
+    if gather_mode not in GATHER_MODES:
+        raise ValueError(f"unknown gather_mode {gather_mode!r} "
+                         f"(one of {GATHER_MODES})")
+    mesh = normalize_mesh(mesh)
+    tmax = nai.t_max
+    ts2_on = jnp.float32(nai.t_s) ** 2
+
+    def body(ops, x, exit_order, l, gather, any_fn, nb, rows):
+        node_active = (exit_order == 0).astype(jnp.int32)
+        ts2 = jnp.where((l >= nai.t_min) & (l < tmax), ts2_on,
+                        jnp.float32(-1.0))
+        live = any_fn(exit_order == 0)
+        sa = ops.get("step_active")
+        active_rb = sa[l - 1] * live if sa is not None else None
+        x, exits = backend.step(ops, gather(x), node_active, active_rb,
+                                ts2, n_batch=nb, n_rows=rows,
+                                interpret=interpret)
+        exit_order = jnp.where((node_active != 0) & exits, l, exit_order)
+        return x, exit_order
+
+    if mesh is None:
+        @jax.jit
+        def step_single(operands, x, exit_order, l):
+            backend.validate(operands, x, n_batch)
+            return body(dict(operands), x, exit_order, l,
+                        gather=lambda x: x,
+                        any_fn=lambda m: jnp.any(m).astype(jnp.int32),
+                        nb=n_batch, rows=n_rows)
+
+        return step_single
+
+    D = int(mesh.shape["data"])
+    if n_batch % (CB * D) or n_rows % (CB * D):
+        raise ValueError(
+            f"sharded operands must be packed with n_shards={D}: "
+            f"n_batch {n_batch} and rows {n_rows} must be multiples of "
+            f"CB*D = {CB * D}")
+    nb_loc, rows_loc = n_batch // D, n_rows // D
+    logical = operand_logical(backend, gather_mode)
+    keys = tuple(logical)
+    in_specs = tuple(spec(*logical[k], mesh=mesh) for k in keys) + (
+        spec("row_shard", None, mesh=mesh),   # x
+        spec("row_shard", mesh=mesh),         # exit_order
+        spec(mesh=mesh))                      # l (replicated scalar)
+    out_specs = (spec("row_shard", None, mesh=mesh),
+                 spec("row_shard", mesh=mesh))
+
+    def local_fn(*args):
+        (x, exit_order, l), args = args[-3:], args[:-3]
+        ops = dict(zip(keys, args))
+        if gather_mode == "dense":
+            def gather(x):
+                return jax.lax.all_gather(x, "data", axis=0, tiled=True)
+        else:
+            gather = _halo_gather(
+                gather_mode, {k: ops.pop(k)[0] for k in HALO_LOGICAL},
+                rows_loc)
+        if backend.uses_edges:
+            ops.update({k: ops[k][0] for k in ("src", "dst", "coef")})
+        backend.validate(ops, x, nb_loc)
+        return body(ops, x, exit_order, l, gather=gather,
+                    any_fn=lambda m: (jax.lax.psum(
+                        jnp.any(m).astype(jnp.int32), "data") > 0
+                        ).astype(jnp.int32),
+                    nb=nb_loc, rows=rows_loc)
+
+    # check_rep=False for the same reason as run_propagation: parity
+    # tests, not the rep tracker, are the correctness oracle
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+
+    @jax.jit
+    def step_sharded(operands, x, exit_order, l):
+        missing = [k for k in keys if k not in operands]
+        if missing:
+            raise ValueError(f"sharded superstep is missing operands "
+                             f"{missing}")
+        return fn(*(operands[k] for k in keys), x, exit_order, l)
+
+    return step_sharded
+
+
 def run_propagation(backend: PropagationBackend, nai, operands: dict,
                     x0, n_batch: int, *, interpret: bool = True,
                     mesh=None, gather_mode: str = "dense",

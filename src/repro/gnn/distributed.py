@@ -58,24 +58,43 @@ def graph_as_support(g, r: float = 0.5) -> Support:
 
 def pack_graph(g, n_shards: int, r: float = 0.5,
                spmm_impl: str = "segment", *, nb_bucket=None,
-               s_bucket=None, tb_bucket=None, halo: bool = False):
-    """(backend, PackedSupport) for full-graph propagation. Exits are
-    disabled downstream (t_min > t_max), so the stationary operands are
-    inert: zero rank-1 factors for the fused backend, an all-zero dense
-    x_inf otherwise. Explicit buckets pin the padding geometry so runs
-    at different shard counts are bit-comparable. `halo=True` emits the
-    halo-frame metadata for the non-dense gather modes (full-graph
-    partitions of a well-mixed graph reference most blocks, so expect a
-    halo fraction near 1 — batch serving is where the halo pays)."""
+               s_bucket=None, tb_bucket=None, halo: bool = False,
+               stationary: bool = False):
+    """(backend, PackedSupport) for full-graph propagation.
+
+    Default (`stationary=False`, the `distributed_series` oracle path):
+    exits are disabled downstream (t_min > t_max), so the stationary
+    operands are inert — zero rank-1 factors for the fused backend, an
+    all-zero dense x_inf otherwise. `stationary=True` (the offline
+    full-graph NAI driver, `repro.launch.full_graph_infer`) packs the
+    REAL Eq. 7 stationary state of the whole graph instead — the exact
+    factors `repro.gnn.nai.support_stationary_factors` computes, cast
+    f32 the same way the serving path casts them — so the Eq. 8 exit
+    decision runs with the same arithmetic serving uses.
+
+    Explicit buckets pin the padding geometry so runs at different
+    shard counts are bit-comparable. `halo=True` emits the halo-frame
+    metadata for the non-dense gather modes (full-graph partitions of a
+    well-mixed graph reference most blocks, so expect a halo fraction
+    near 1 — batch serving is where the halo pays)."""
     be = get_backend(spmm_impl)
     store = as_store(g)
     sup = graph_as_support(store, r)
     x0 = np.asarray(store.features, np.float32)
     f = x0.shape[1]
-    factors = ((np.zeros(sup.n_batch, np.float32),
-                np.zeros(f, np.float32)) if be.uses_factors else None)
-    x_inf = np.zeros((sup.n_batch, 0 if be.uses_factors else f),
-                     np.float32)
+    if stationary:
+        from repro.gnn.nai import support_stationary_factors
+        c64, s64 = support_stationary_factors(store, sup, x0, r)
+        factors = ((c64.astype(np.float32), s64.astype(np.float32))
+                   if be.uses_factors else None)
+        x_inf = (np.zeros((sup.n_batch, 0), np.float32)
+                 if be.uses_factors
+                 else (c64[:, None] * s64[None, :]).astype(np.float32))
+    else:
+        factors = ((np.zeros(sup.n_batch, np.float32),
+                    np.zeros(f, np.float32)) if be.uses_factors else None)
+        x_inf = np.zeros((sup.n_batch, 0 if be.uses_factors else f),
+                         np.float32)
     packed = pack_support(sup, x0, x_inf, nb_bucket=nb_bucket,
                           s_bucket=s_bucket, tb_bucket=tb_bucket,
                           build_tiles=be.uses_tiles,

@@ -7,9 +7,9 @@ the supporting set partitioned into hop layers plus the induced subgraph
 The sampler is STORE-FIRST: it walks the `row_ptr` / `col_idx` /
 `degrees` views of a `repro.gnn.store.GraphStore`, so the same code
 serves an in-RAM `InMemoryStore` and a disk-backed `MmapStore` — the
-only storage it ever materializes is the support itself. Passing a raw
-`Graph` positionally still works through a deprecation shim
-(`as_store(warn=True)` wraps it in a memoized `InMemoryStore`).
+only storage it ever materializes is the support itself. The sampler is
+store-first: raw `Graph` arguments are a TypeError (the PR-7 deprecation
+shim is gone) — wrap in-RAM graphs with `as_store` at the call site.
 
 Per-batch cost is O(support), not O(n): the visited-set and local-id
 maps are epoch-stamped scratch arrays cached on the store — no O(n)
@@ -100,8 +100,9 @@ def _first_occurrence(a: np.ndarray) -> np.ndarray:
 def sample_support(store, batch: np.ndarray, hops: int, r: float,
                    *, cache=None) -> Support:
     """Vectorized frontier expansion (numpy repeat/unique, no dicts)
-    over a `GraphStore`'s CSR views. `store` may also be a raw `Graph`
-    (deprecated — wrapped via `as_store`).
+    over a `GraphStore`'s CSR views. Store-first since PR 7: a raw
+    `Graph` is a TypeError — wrap in-RAM graphs with
+    `repro.gnn.store.as_store` (or `InMemoryStore`) at the call site.
 
     With `cache` (a `repro.gnn.propcache.PropCache`), each discovered
     layer is probed and hit nodes are marked in `Support.hit`, with
@@ -113,7 +114,12 @@ def sample_support(store, batch: np.ndarray, hops: int, r: float,
     from the packed block-ELL and their values seeded per step instead
     of recomputed (see `packing.pack_support`).
     """
-    store = as_store(store, warn=True)
+    if not isinstance(store, GraphStore):
+        raise TypeError(
+            f"sample_support is store-first: expected a GraphStore, got "
+            f"{type(store).__name__} (wrap an in-RAM Graph with "
+            f"repro.gnn.store.as_store; the positional-Graph "
+            f"deprecation shim was removed)")
     row_ptr, col_idx = store.csr()
     graph_version = store.mutation_clock
     scratch = _scratch(store)

@@ -65,7 +65,6 @@ import json
 import mmap as _mmap
 import os
 import time
-import warnings
 import zlib
 from typing import Dict, List, Optional, Tuple
 
@@ -734,23 +733,19 @@ class MmapStore(GraphStore):
         return own["labels"] if own is not None else self._load("labels")
 
 
-def as_store(obj, *, warn: bool = False) -> GraphStore:
+def as_store(obj) -> GraphStore:
     """Normalize a `GraphStore` | `Graph` argument to a store.
 
     A raw `Graph` is wrapped in an `InMemoryStore` memoized ON the graph
     object, so repeated calls (one per served batch) reuse the cached
-    degree metadata and sampler scratch instead of recounting. `warn`
-    additionally emits the `sample_support` deprecation for positional
-    Graph callers."""
+    degree metadata and sampler scratch instead of recounting. This is
+    the supported zero-copy convenience for in-RAM graphs (engine /
+    distributed entry points); `sample_support` itself is store-first
+    and rejects raw Graphs — the PR-7 deprecation shim (and its
+    warn-once machinery) was retired in PR 10."""
     if isinstance(obj, GraphStore):
         return obj
     if isinstance(obj, Graph):
-        if warn:
-            warnings.warn(
-                "passing a raw Graph is deprecated; pass a GraphStore "
-                "(wrap with repro.gnn.store.InMemoryStore, or serve an "
-                "on-disk graph with MmapStore)", DeprecationWarning,
-                stacklevel=3)
         store = obj.__dict__.get("_store_cache")
         if store is None:
             store = InMemoryStore(obj)

@@ -39,6 +39,21 @@ for the store stages):
     ``nan``            device results poisoned with NaN (bad logits)
     ``hang``           device results never become ready (hung sync)
     ``slow``           host stage sleeps ``delay_s`` (straggler batch)
+
+Offline full-graph inference stages (repro.launch.full_graph_infer;
+event counter = one tick per checkpoint write / checkpoint read /
+dispatched superstep attempt):
+
+    ``ckpt_write``     checkpoint payload written but the manifest
+                       commit raises (crash mid-checkpoint)
+    ``ckpt_read``      a committed checkpoint reads back corrupt
+                       (typed CheckpointCorruption from the manager)
+    ``superstep_hang`` a dispatched superstep is declared hung — the
+                       driver's per-superstep watchdog retries it
+
+New stages are APPENDED to `STAGES`: rng streams are seeded by stage
+index (``[seed, i]``), so inserting in the middle would silently
+re-deal every existing plan's random draws.
 """
 from __future__ import annotations
 
@@ -51,7 +66,7 @@ import numpy as np
 from repro.gnn.store import GraphStore, StoreIOError
 
 STAGES = ("store_read", "store_latency", "host", "device", "nan",
-          "hang", "slow")
+          "hang", "slow", "ckpt_write", "ckpt_read", "superstep_hang")
 
 
 class InjectedFault(RuntimeError):

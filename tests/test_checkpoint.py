@@ -1,0 +1,198 @@
+"""Checkpoint-manifest contract tests (repro.launch.checkpoint).
+
+The offline driver's resume parity reduces to these invariants: bit-
+exact payload round-trips, atomic commits (trailing un-committed files
+are invisible), typed corruption detection (CRC mismatch, truncation,
+missing files, garbage manifests), and fingerprint binding. Each gets
+a deterministic test; the round-trip also gets a hypothesis property
+when the package is available (the CI image has no pip access)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch.checkpoint import (FORMAT, MANIFEST, CheckpointCorruption,
+                                     CheckpointError, CheckpointManager,
+                                     CheckpointMismatch)
+from repro.serving.faults import FaultPlan, FaultSpec, InjectedFault
+
+FP = {"store": "t", "n": 10, "shards": 1}
+
+
+def _arrays(rng, dtypes=(np.float32, np.int32, np.float64, np.int64)):
+    out = {}
+    for i, dt in enumerate(dtypes):
+        shape = tuple(int(s) for s in rng.integers(1, 7, size=2))
+        a = rng.standard_normal(shape) * 100
+        out[f"a{i}"] = a.astype(dt)
+    return out
+
+
+# --------------------------------------------------------- round trip
+def test_round_trip_bit_identical(tmp_path):
+    rng = np.random.default_rng(0)
+    mgr = CheckpointManager(str(tmp_path), fingerprint=FP)
+    saved = {}
+    for step in range(4):
+        saved[step] = _arrays(rng)
+        mgr.save_step(step, saved[step])
+    assert mgr.steps() == [0, 1, 2, 3]
+    assert mgr.latest_complete() == 3
+    assert mgr.latest_complete(verify=True) == 3
+    # reopen from disk: same steps, same bytes, same dtypes/shapes
+    re = CheckpointManager(str(tmp_path), fingerprint=FP)
+    for step, arrays in saved.items():
+        got = re.load_step(step)
+        assert set(got) == set(arrays)
+        for k, a in arrays.items():
+            assert got[k].dtype == a.dtype and got[k].shape == a.shape
+            np.testing.assert_array_equal(got[k], a)
+    assert re.total_bytes() == mgr.total_bytes() > 0
+
+
+def test_round_trip_property_hypothesis(tmp_path):
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra import numpy as hnp
+
+    dtypes = st.sampled_from([np.float32, np.float64, np.int32,
+                              np.int64, np.uint8, np.bool_])
+    arrays = dtypes.flatmap(lambda dt: hnp.arrays(
+        dt, hnp.array_shapes(min_dims=1, max_dims=3, max_side=8)))
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture])
+    @given(payload=st.dictionaries(
+        st.text("abcdefgh_", min_size=1, max_size=8), arrays,
+        min_size=1, max_size=4), step=st.integers(0, 99))
+    def prop(payload, step):
+        root = str(tmp_path / f"p{step}_{abs(hash(str(sorted(payload))))}")
+        mgr = CheckpointManager(root, fingerprint=FP)
+        mgr.save_step(step, payload)
+        got = CheckpointManager(root, fingerprint=FP).load_step(step)
+        assert set(got) == set(payload)
+        for k, a in payload.items():
+            assert got[k].dtype == np.asarray(a).dtype
+            np.testing.assert_array_equal(got[k], a)
+
+    prop()
+
+
+def test_result_round_trip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), fingerprint=FP)
+    assert mgr.load_result() is None
+    res = {"predictions": np.arange(9, dtype=np.int32),
+           "exit_orders": np.ones(9, np.int32)}
+    mgr.save_result(res)
+    got = CheckpointManager(str(tmp_path), fingerprint=FP).load_result()
+    np.testing.assert_array_equal(got["predictions"], res["predictions"])
+    np.testing.assert_array_equal(got["exit_orders"], res["exit_orders"])
+
+
+# ----------------------------------------------------------- atomicity
+def test_uncommitted_trailing_payloads_are_invisible(tmp_path):
+    """A crash between payload write and manifest commit (the ckpt_write
+    injection window) leaves step files no manifest entry names — a
+    resume must not see them."""
+    mgr = CheckpointManager(str(tmp_path), fingerprint=FP,
+                            injector=FaultPlan(
+                                [FaultSpec("ckpt_write", at=(1,))]
+                            ).injector())
+    mgr.save_step(0, {"x": np.zeros(4, np.float32)})
+    with pytest.raises(InjectedFault):
+        mgr.save_step(1, {"x": np.ones(4, np.float32)})
+    # payload dir exists on disk, but the commit never happened
+    assert os.path.isdir(tmp_path / "step_00001")
+    re = CheckpointManager(str(tmp_path), fingerprint=FP)
+    assert re.steps() == [0]
+    assert re.latest_complete(verify=True) == 0
+    with pytest.raises(CheckpointError):
+        re.load_step(1)
+
+
+def test_commit_replaces_manifest_atomically(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), fingerprint=FP)
+    mgr.save_step(0, {"x": np.zeros(3, np.float32)})
+    assert not os.path.exists(str(tmp_path / MANIFEST) + ".tmp")
+    doc = json.load(open(tmp_path / MANIFEST))
+    assert doc["format"] == FORMAT and "0" in doc["steps"]
+
+
+# ---------------------------------------------------------- corruption
+def test_corruption_is_typed_and_bounded(tmp_path):
+    rng = np.random.default_rng(1)
+    mgr = CheckpointManager(str(tmp_path), fingerprint=FP)
+    for step in range(3):
+        mgr.save_step(step, {"x": rng.standard_normal(8).astype(
+            np.float32)})
+    # flip one byte mid-file in step 2
+    path = tmp_path / "step_00002" / "x.npy"
+    with open(path, "r+b") as fh:
+        fh.seek(os.path.getsize(path) // 2)
+        b = fh.read(1)
+        fh.seek(-1, 1)
+        fh.write(bytes([b[0] ^ 0xFF]))
+    re = CheckpointManager(str(tmp_path), fingerprint=FP)
+    with pytest.raises(CheckpointCorruption, match="CRC mismatch"):
+        re.load_step(2)
+    re.load_step(1)                          # earlier steps unharmed
+    assert re.latest_complete() == 2         # committed, but...
+    assert re.latest_complete(verify=True) == 1   # ...not verifiable
+
+
+def test_truncated_and_missing_payloads_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), fingerprint=FP)
+    mgr.save_step(0, {"x": np.arange(64, dtype=np.float64)})
+    mgr.save_step(1, {"x": np.arange(64, dtype=np.float64)})
+    path = tmp_path / "step_00000" / "x.npy"
+    with open(path, "r+b") as fh:
+        fh.truncate(os.path.getsize(path) // 2)
+    re = CheckpointManager(str(tmp_path), fingerprint=FP)
+    with pytest.raises(CheckpointCorruption):
+        re.load_step(0)
+    os.remove(tmp_path / "step_00001" / "x.npy")
+    with pytest.raises(CheckpointCorruption, match="missing"):
+        re.load_step(1)
+    assert re.latest_complete(verify=True) is None
+
+
+def test_garbage_manifest_rejected(tmp_path):
+    with open(tmp_path / MANIFEST, "w") as fh:
+        fh.write("{not json")
+    with pytest.raises(CheckpointCorruption, match="not valid JSON"):
+        CheckpointManager(str(tmp_path))
+    with open(tmp_path / MANIFEST, "w") as fh:
+        json.dump({"format": FORMAT, "nothing": 1}, fh)
+    with pytest.raises(CheckpointCorruption, match="steps table"):
+        CheckpointManager(str(tmp_path))
+
+
+def test_injected_read_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), fingerprint=FP)
+    mgr.save_step(0, {"x": np.zeros(2, np.float32)})
+    bad = CheckpointManager(str(tmp_path), fingerprint=FP,
+                            injector=FaultPlan(
+                                [FaultSpec("ckpt_read", at=(0,))]
+                            ).injector())
+    with pytest.raises(CheckpointCorruption, match="injected"):
+        bad.load_step(0)
+    # the next read (injection exhausted) succeeds
+    bad.load_step(0)
+
+
+# --------------------------------------------------------- fingerprint
+def test_fingerprint_binds_checkpoint_to_run(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), fingerprint=FP)
+    mgr.save_step(0, {"x": np.zeros(2, np.float32)})
+    CheckpointManager(str(tmp_path), fingerprint=dict(FP))   # same: fine
+    with pytest.raises(CheckpointMismatch):
+        CheckpointManager(str(tmp_path),
+                          fingerprint={**FP, "shards": 2})
+    # foreign format version is a mismatch, not a guess
+    doc = json.load(open(tmp_path / MANIFEST))
+    doc["format"] = "some-other-format"
+    json.dump(doc, open(tmp_path / MANIFEST, "w"))
+    with pytest.raises(CheckpointMismatch, match="format"):
+        CheckpointManager(str(tmp_path), fingerprint=FP)

@@ -12,6 +12,7 @@ import pytest
 from repro.gnn import GNNConfig, init_classifiers, load_dataset
 from repro.gnn.nai import NAIConfig
 from repro.serving import NAIServingEngine
+from repro.gnn.store import as_store
 
 
 @pytest.fixture(scope="module")
@@ -56,7 +57,7 @@ def test_compiled_matches_host(setup):
         # engines.
         from repro.gnn import sample_support
         from repro.gnn.nai import _subgraph_spmm, support_stationary_state
-        sup = sample_support(g, nodes, nai.t_max, cfg.r)
+        sup = sample_support(as_store(g), nodes, nai.t_max, cfg.r)
         x0 = g.features[sup.nodes].astype(np.float32)
         x_inf = support_stationary_state(g, sup, x0, cfg.r)
         x1, _ = _subgraph_spmm(sup, x0, np.ones(len(sup), bool))

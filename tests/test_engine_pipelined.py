@@ -14,6 +14,7 @@ from repro.gnn.nai import NAIConfig, _needed_mask
 from repro.gnn.sampler import sample_support
 from repro.serving import NAIServingEngine
 from repro.serving.engine import EngineStats, LatencyRing
+from repro.gnn.store import as_store
 
 
 @pytest.fixture(scope="module")
@@ -203,7 +204,7 @@ def test_needed_mask_matches_isin_reference(setup):
     g, cfg, _, nai = setup
     rng = np.random.default_rng(7)
     nodes = rng.choice(g.test_idx, size=32, replace=False)
-    sup = sample_support(g, nodes, 3, cfg.r)
+    sup = sample_support(as_store(g), nodes, 3, cfg.r)
     for frac in (1.0, 0.5, 0.1, 0.0):
         active = rng.random(sup.n_batch) < frac
         for hops in (0, 1, 2, 3):

@@ -9,6 +9,7 @@ from repro.gnn import (GNNConfig, NAIConfig, infer_all, load_dataset,
                        stationary_weights)
 from repro.gnn.graph import Graph, add_self_loops, edge_coefficients, spmm
 from repro.gnn.sampler import sample_support
+from repro.gnn.store import as_store
 
 
 def tiny_graph(n=60, seed=0, f=16, c=3):
@@ -93,7 +94,7 @@ def test_support_sampling_exactness():
     g = tiny_graph(n=80, seed=3)
     batch = g.test_idx[:10]
     tmax = 3
-    sup = sample_support(g, batch, tmax, 0.5)
+    sup = sample_support(as_store(g), batch, tmax, 0.5)
     assert np.array_equal(sup.nodes[:10], batch)
     series_full = propagated_series(g, g.features, tmax)
     x = g.features[sup.nodes].astype(np.float32)
@@ -213,7 +214,7 @@ def test_sampler_sub_edges_counts_actual_self_loops():
               train_idx=np.array([0], np.int32),
               unlabeled_idx=np.array([1], np.int32),
               test_idx=np.array([2, 3], np.int32))
-    sup = sample_support(g, np.array([2], np.int64), hops=2, r=0.5)
+    sup = sample_support(as_store(g), np.array([2], np.int64), hops=2, r=0.5)
     assert set(sup.nodes.tolist()) == {0, 1, 2, 3}
     loops = int((sup.src == sup.dst).sum())
     assert loops == 2                          # only 0 and 1 kept theirs

@@ -5,13 +5,14 @@ import numpy as np
 from repro.gnn import GNNConfig, load_dataset
 from repro.gnn.nai import NAIConfig, infer_batch_masked, _subgraph_spmm
 from repro.gnn.sampler import sample_support
+from repro.gnn.store import as_store
 
 
 def _setup(tmax=3):
     g = load_dataset("pubmed-like", scale=0.05, seed=4)
     cfg = GNNConfig("sgc", g.features.shape[1], g.num_classes, k=tmax)
     batch = g.test_idx[:64]
-    sup = sample_support(g, batch, tmax, cfg.r)
+    sup = sample_support(as_store(g), batch, tmax, cfg.r)
     x0 = g.features[sup.nodes].astype(np.float32)
     dt = (g.degrees[sup.nodes] + 1).astype(np.float64)
     denom = 2.0 * sup.sub_edges + len(sup)

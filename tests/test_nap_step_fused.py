@@ -17,6 +17,7 @@ from repro.gnn.sampler import sample_support
 from repro.kernels.nap_step import (fused_step, nap_step_fused,
                                     ref_nap_step, two_launch_step)
 from repro.kernels.spmm import CB, RB, build_block_ell, pad_features
+from repro.gnn.store import as_store
 
 
 def _random_graph(rng, n, deg):
@@ -112,7 +113,7 @@ def packed_case():
     g = load_dataset("pubmed-like", scale=0.03, seed=1)
     rng = np.random.default_rng(0)
     batch = rng.choice(g.test_idx, size=37, replace=False)
-    sup = sample_support(g, batch, 3, 0.5)
+    sup = sample_support(as_store(g), batch, 3, 0.5)
     x0 = g.features[sup.nodes][:, :64].astype(np.float32)
     c64, s64 = support_stationary_factors(g, sup, x0, 0.5)
     c32 = c64.astype(np.float32)

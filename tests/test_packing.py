@@ -11,6 +11,7 @@ from repro.gnn.packing import (next_bucket, pack_support,
                                step_active_blocks)
 from repro.gnn.sampler import sample_support
 from repro.kernels.spmm import spmm_block_ell
+from repro.gnn.store import as_store
 
 
 @pytest.fixture(scope="module")
@@ -18,7 +19,7 @@ def packed_case():
     g = load_dataset("pubmed-like", scale=0.03, seed=1)
     rng = np.random.default_rng(0)
     batch = rng.choice(g.test_idx, size=37, replace=False)
-    sup = sample_support(g, batch, 2, 0.5)
+    sup = sample_support(as_store(g), batch, 2, 0.5)
     x0 = g.features[sup.nodes][:, :64].astype(np.float32)
     x_inf = np.zeros((sup.n_batch, 64), np.float32)
     packed = pack_support(sup, x0, x_inf)

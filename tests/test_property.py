@@ -13,6 +13,7 @@ from repro.gnn.graph import Graph, add_self_loops, edge_coefficients, spmm
 from repro.gnn.sampler import sample_support
 from repro.launch.hlo_analysis import _shape_bytes, _shape_elems
 from repro.sharding.logical import fit_spec
+from repro.gnn.store import as_store
 from jax.sharding import PartitionSpec as P
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -82,7 +83,7 @@ def test_sampler_invariants(n, pairs, bs, hops, r, seed):
     strictly positive."""
     g = _graph_from_edges(n, pairs)
     batch = np.random.default_rng(seed).permutation(n)[:min(bs, n)]
-    sup = sample_support(g, batch, hops, r)
+    sup = sample_support(as_store(g), batch, hops, r)
     nb = len(batch)
     assert sup.n_batch == nb
     assert np.array_equal(sup.nodes[:nb], batch)
@@ -106,7 +107,7 @@ def test_sampler_hop_layers_are_bfs_frontiers(n, pairs, bs, hops):
     expansion), and no node closer to the batch is labeled farther."""
     g = _graph_from_edges(n, pairs)
     batch = np.arange(min(bs, n))
-    sup = sample_support(g, batch, hops, 0.5)
+    sup = sample_support(as_store(g), batch, hops, 0.5)
     hop_of = {int(u): int(h) for u, h in zip(sup.nodes, sup.hop)}
     indptr, nbr = g.csr()
     for u, h in zip(sup.nodes, sup.hop):

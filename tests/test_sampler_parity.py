@@ -8,6 +8,7 @@ import pytest
 
 from repro.gnn import load_dataset
 from repro.gnn.sampler import sample_support, sample_support_legacy
+from repro.gnn.store import as_store
 
 
 @functools.lru_cache(maxsize=None)
@@ -27,7 +28,7 @@ def test_vectorized_matches_legacy(name, scale, seed, hops, bs):
     batch = rng.choice(g.test_idx, size=min(bs, len(g.test_idx)),
                        replace=False)
     for r in (0.5, 0.3):
-        a = sample_support(g, batch, hops, r)
+        a = sample_support(as_store(g), batch, hops, r)
         b = sample_support_legacy(g, batch, hops, r)
         assert np.array_equal(a.nodes, b.nodes)
         assert np.array_equal(a.hop, b.hop)
@@ -43,7 +44,7 @@ def test_isolated_batch_node():
     g = _graph("pubmed-like", 0.03, 0)
     deg = np.diff(g.csr()[0])
     lone = int(np.argmin(deg))
-    a = sample_support(g, np.array([lone]), 2, 0.5)
+    a = sample_support(as_store(g), np.array([lone]), 2, 0.5)
     b = sample_support_legacy(g, np.array([lone]), 2, 0.5)
     assert np.array_equal(a.nodes, b.nodes)
     assert np.array_equal(a.src, b.src)
@@ -54,7 +55,7 @@ def test_whole_test_set_batch():
     """Large batch (the serving engine's full batch) stays identical."""
     g = _graph("pubmed-like", 0.03, 0)
     batch = g.test_idx[:  min(300, len(g.test_idx))]
-    a = sample_support(g, batch, 2, 0.5)
+    a = sample_support(as_store(g), batch, 2, 0.5)
     b = sample_support_legacy(g, batch, 2, 0.5)
     assert np.array_equal(a.nodes, b.nodes)
     assert np.array_equal(a.hop, b.hop)
@@ -72,7 +73,7 @@ def test_sampler_invariants_without_hypothesis():
     rng = np.random.default_rng(5)
     for hops in (1, 3):
         batch = rng.choice(g.test_idx, size=40, replace=False)
-        sup = sample_support(g, batch, hops, 0.5)
+        sup = sample_support(as_store(g), batch, hops, 0.5)
         assert np.array_equal(sup.nodes[:len(batch)], batch)
         assert (sup.hop[:len(batch)] == 0).all()
         assert (np.diff(sup.hop) >= 0).all()

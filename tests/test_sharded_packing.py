@@ -13,6 +13,7 @@ from repro.gnn.packing import (CB, RB, batch_bucket, pack_support,
                                shard_batch_perm, shard_block_perm,
                                shard_row_perm)
 from repro.gnn.sampler import sample_support
+from repro.gnn.store import as_store
 
 
 @pytest.fixture(scope="module")
@@ -24,7 +25,7 @@ def _packs(g, batch_size, seed, n_shards, **kw):
     """(sharded, single-device-with-identical-geometry) pack pair."""
     rng = np.random.default_rng(seed)
     batch = rng.choice(g.test_idx, size=batch_size, replace=False)
-    sup = sample_support(g, batch, 2, 0.5)
+    sup = sample_support(as_store(g), batch, 2, 0.5)
     x0 = g.features[sup.nodes][:, :64].astype(np.float32)
     c, s = support_stationary_factors(g, sup, x0, 0.5)
     c, s = c.astype(np.float32), s.astype(np.float32)
@@ -167,7 +168,7 @@ def _halo_packs(g, batch_size, seed, n_shards, **kw):
     byte-identical and only the coordinate systems differ)."""
     rng = np.random.default_rng(seed)
     batch = rng.choice(g.test_idx, size=batch_size, replace=False)
-    sup = sample_support(g, batch, 2, 0.5)
+    sup = sample_support(as_store(g), batch, 2, 0.5)
     x0 = g.features[sup.nodes][:, :64].astype(np.float32)
     x_inf = np.zeros((sup.n_batch, 64), np.float32)
     dense = pack_support(sup, x0, x_inf, n_shards=n_shards, **kw)
@@ -281,7 +282,7 @@ def test_batch_bucket_alignment():
 def test_sharded_bucket_floor_validation(graph):
     rng = np.random.default_rng(0)
     batch = rng.choice(graph.test_idx, size=16, replace=False)
-    sup = sample_support(graph, batch, 2, 0.5)
+    sup = sample_support(as_store(graph), batch, 2, 0.5)
     x0 = graph.features[sup.nodes][:, :64].astype(np.float32)
     x_inf = np.zeros((sup.n_batch, 64), np.float32)
     with pytest.raises(ValueError):

@@ -1,11 +1,10 @@
 """GraphStore tests: the MmapStore/InMemoryStore bit-parity the store
 redesign promises (same CSR, same features => same sampling, packing,
-predictions AND exit orders), the save/load round trip, the deprecation
-shim for positional `Graph` callers, and hypothesis properties of the
+predictions AND exit orders), the save/load round trip, the strict
+store-first sampler contract, and hypothesis properties of the
 synthetic power-law generator (valid CSR, deterministic under seed,
 in-RAM == on-disk generation)."""
 import dataclasses
-import warnings
 
 import jax
 import numpy as np
@@ -95,14 +94,12 @@ def test_mmap_gather_bounded_residency_is_lossless(setup):
     assert eager.drop_resident() == 0
 
 
-def test_as_store_memoizes_and_warns_on_graph(setup):
+def test_as_store_memoizes_and_sampler_is_strict(setup):
     g, *_ = setup
     s1 = as_store(g)
     s2 = as_store(g)
     assert s1 is s2 and isinstance(s1, InMemoryStore)
     assert as_store(s1) is s1
-    with pytest.warns(DeprecationWarning):
-        as_store(g, warn=True)
     with pytest.raises(TypeError):
         as_store(np.arange(3))
     # the memoized wrap is bit-identical to a fresh zero-copy wrap
@@ -112,33 +109,20 @@ def test_as_store_memoizes_and_warns_on_graph(setup):
     np.testing.assert_array_equal(s1.col_idx, fresh.col_idx)
     np.testing.assert_array_equal(s1.degrees, fresh.degrees)
     assert s1.num_edges == fresh.num_edges
-    # under the stdlib "default" filter the shim warns exactly once PER
-    # CALL SITE: repeated calls from one site are registry-deduped, a
-    # second site warns again (stacklevel points at the caller)
+    # the positional-Graph deprecation shim is retired: sample_support
+    # is store-first and a raw Graph is a TypeError, not a warning
     nodes = g.test_idx[:8]
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("default")
-        for _ in range(3):
-            sample_support(g, nodes, 1, 0.5)     # site A, three calls
-        deps = [w for w in rec
-                if issubclass(w.category, DeprecationWarning)]
-        assert len(deps) == 1
-        sample_support(g, nodes, 1, 0.5)         # site B
-        deps = [w for w in rec
-                if issubclass(w.category, DeprecationWarning)]
-        assert len(deps) == 2
+    with pytest.raises(TypeError, match="store-first"):
+        sample_support(g, nodes, 1, 0.5)
 
 
-def test_sampler_accepts_store_and_matches_graph_shim(setup):
+def test_sampler_accepts_store_and_matches_wrapped_graph(setup):
     g, cfg, _, nai, path = setup
     store = MmapStore(path)
     rng = np.random.default_rng(0)
     nodes = rng.choice(g.test_idx, size=32, replace=False)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        sup_m = sample_support(store, nodes, nai.t_max, cfg.r)
-    with pytest.warns(DeprecationWarning):
-        sup_g = sample_support(g, nodes, nai.t_max, cfg.r)
+    sup_m = sample_support(store, nodes, nai.t_max, cfg.r)
+    sup_g = sample_support(as_store(g), nodes, nai.t_max, cfg.r)
     sup_o = _sample_support_legacy(store, nodes, nai.t_max, cfg.r)
     for a, b in ((sup_m, sup_g), (sup_m, sup_o)):
         np.testing.assert_array_equal(a.nodes, b.nodes)
